@@ -1,0 +1,44 @@
+"""Paper §6 / Thm 6.2 table — general m-simplex self-similar sets.
+
+For each m: the r=1/2, beta=2 extra-space fraction (Lemma 6.1's
+m!/(2^m-2) - 1), the best integer (1/r, beta) found by the Thm 6.2
+optimization, its n0 coverage onset, and the resulting parallel-space
+speedup vs bounding box (upper bound m!)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.general_m import alpha_r_half_beta_2, optimize_r_beta
+
+
+def run(m_max: int = 8):
+    rows = []
+    for m in range(2, m_max + 1):
+        cands = optimize_r_beta(m, max_inv_r=10, max_beta=24, n_max=1 << 22)
+        best = cands[0] if cands else None
+        rows.append({
+            "m": m,
+            "alpha_half_2": alpha_r_half_beta_2(m),
+            "best_inv_r": best.inv_r if best else None,
+            "best_beta": best.beta if best else None,
+            "best_alpha": best.alpha if best else None,
+            "n0": best.n0 if best else None,
+            "speedup_vs_bb": best.speedup if best else None,
+            "speedup_upper_bound": float(math.factorial(m)),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("m,alpha(r=1/2,b=2),best_1/r,best_beta,best_alpha,n0,speedup,bound_m!")
+    for r in rows:
+        print(f"{r['m']},{r['alpha_half_2']:.3f},{r['best_inv_r']},"
+              f"{r['best_beta']},{r['best_alpha']:.3f},{r['n0']},"
+              f"{r['speedup_vs_bb']:.1f},{r['speedup_upper_bound']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

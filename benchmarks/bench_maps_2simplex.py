@@ -1,0 +1,101 @@
+"""Paper Fig. 10 — 2-simplex tests: MAP / ACCUM / EDM / CA2D for
+{H(omega), RB, lambda, BB}.
+
+Two measurements per (test x map):
+  * parallel-space ratio — grid steps the schedule launches vs BB; this
+    is hardware-independent and is what the paper's MAP test isolates
+    (its theoretical 2x);
+  * wall-clock of the jitted kernel on this host (interpret-mode Pallas:
+    per-step interpreter cost makes wall time track grid steps; the XLA
+    attention benchmark below gives a compiled-speed counterpart).
+
+The lambda map additionally reproduces the paper's FP32 precision
+failure (§3/§5.2: exact only in a bounded range without integer
+correction).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import grid_steps
+from repro.core.maps_baseline import lambda_map2_raw
+from repro.kernels import ref as R
+from repro.kernels import simplex_kernels as K
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(n: int = 256, rho: int = 16):
+    nb = n // rho
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (n, n), 0, 100).astype(jnp.int32)
+    p = jax.random.normal(key, (n, 64), dtype=jnp.float32)
+    ca = (jax.random.uniform(key, (n, n)) < 0.4).astype(jnp.int32)
+    ca = ca * R.tril_mask(n, jnp.int32)
+
+    import functools
+
+    tests = {
+        "MAP": lambda kind: functools.partial(K.map2d, nb, kind),
+        "ACCUM": lambda kind: functools.partial(K.accum2d, x, rho=rho, kind=kind),
+        "EDM": lambda kind: functools.partial(K.edm2d, p, rho=rho, kind=kind),
+        "CA2D": lambda kind: functools.partial(K.ca2d, ca, rho=rho, kind=kind),
+    }
+    for tname, mk in tests.items():
+        bb_steps = grid_steps(nb, "bb")
+        bb_us = _time(jax.jit(mk("bb")))
+        for kind in ["hmap", "rb", "bb"]:
+            steps = grid_steps(nb, kind)
+            us = bb_us if kind == "bb" else _time(jax.jit(mk(kind)))
+            rows.append({
+                "test": tname, "map": kind, "n": n, "rho": rho,
+                "grid_steps": steps,
+                "space_speedup_vs_bb": bb_steps / steps,
+                "us_per_call": us,
+                "wall_speedup_vs_bb": bb_us / us,
+            })
+    return rows
+
+
+def lambda_precision_probe():
+    """The uncorrected FP32 lambda map fails beyond a bounded n — the
+    paper's motivation for the root-free H map."""
+    bad_n = None
+    for n in [1024, 4096, 16384, 65536, 262144, 1 << 21, 1 << 23]:
+        total = n * (n + 1) // 2
+        w = np.arange(total - 64, total, dtype=np.int64)
+        xx, yy = lambda_map2_raw(w, dtype=np.float32)
+        ok = np.all((xx >= 0) & (xx <= yy)) and np.array_equal(
+            yy * (yy + 1) // 2 + xx, w
+        )
+        if not ok:
+            bad_n = n
+            break
+    return {"fp32_lambda_first_failure_n": bad_n}
+
+
+def main():
+    rows = run()
+    print("test,map,grid_steps,space_speedup_vs_bb,us_per_call,wall_speedup_vs_bb")
+    for r in rows:
+        print(f"{r['test']},{r['map']},{r['grid_steps']},"
+              f"{r['space_speedup_vs_bb']:.3f},{r['us_per_call']:.0f},"
+              f"{r['wall_speedup_vs_bb']:.2f}")
+    print("lambda_fp32:", lambda_precision_probe())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness aggregator — one section per paper table/figure.
+
+  Fig. 10  -> bench_maps_2simplex   (2-simplex: MAP/ACCUM/EDM/CA2D)
+  Fig. 13  -> bench_maps_3simplex   (3-simplex: MAP3D/ACCUM3D/CA3D)
+  Fig12/15 -> bench_energy          (EPS/W, modeled — DESIGN.md §2)
+  §6/Thm6.2-> bench_general_m       ((r, beta) optimization table)
+  beyond   -> bench_attention       (folded-simplex causal attention)
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus the
+full per-table CSVs.  Roofline tables come from the dry-run artifacts
+(see EXPERIMENTS.md §Roofline), not from this harness.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+
+def main() -> None:
+    from . import (
+        bench_attention,
+        bench_energy,
+        bench_general_m,
+        bench_maps_2simplex,
+        bench_maps_3simplex,
+    )
+
+    t0 = time.time()
+    print("# ==== Fig.10: 2-simplex maps ====")
+    r2 = bench_maps_2simplex.main()
+    print("# ==== Fig.13: 3-simplex maps ====")
+    r3 = bench_maps_3simplex.main()
+    print("# ==== Fig.12/15: energy (modeled) ====")
+    re = bench_energy.main()
+    print("# ==== §6: general-m (r,beta) ====")
+    rg = bench_general_m.main()
+    print("# ==== beyond-paper: folded causal attention ====")
+    ra = bench_attention.main()
+
+    print("# ==== summary: name,us_per_call,derived ====")
+    for r in r2:
+        print(f"fig10/{r['test']}/{r['map']},{r['us_per_call']:.0f},"
+              f"space_speedup={r['space_speedup_vs_bb']:.3f}")
+    for r in r3:
+        us = r["us_per_call"]
+        print(f"fig13/{r['test']}/{r['map']},"
+              f"{us if not math.isnan(us) else 0:.0f},"
+              f"space_speedup={r['space_speedup_vs_bb']:.3f}")
+    for r in re:
+        print(f"fig12/{r['test']}/{r['map']},0,"
+              f"eps_per_w_vs_bb={r['eps_per_w_vs_bb']:.2f}")
+    for r in rg:
+        print(f"sec6/m={r['m']},0,speedup={r['speedup_vs_bb']:.1f}")
+    for r in ra:
+        print(f"attn/{r['shape']},{r['folded_us']:.0f},"
+              f"wall_speedup={r['wall_speedup']:.2f}")
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

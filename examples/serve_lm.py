@@ -1,0 +1,26 @@
+"""Batched serving example: prefill a batch of prompts and decode with
+the KV-cache serve path (the decode_32k dry-run cell's workload, at
+CPU scale).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch jamba-v0.1-52b]
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b",
+                    help="any assigned arch id (reduced config is used)")
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--smoke", "--batch", "4",
+        "--prompt-len", "64", "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    main()

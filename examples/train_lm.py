@@ -1,0 +1,52 @@
+"""End-to-end driver: train an LM for a few hundred steps with
+checkpoint/restart, using the folded-simplex attention schedule.
+
+Presets:
+  --preset smoke  : ~0.9M params,  200 steps, < 2 min on CPU (default)
+  --preset 100m   : ~100M params (yi-6b geometry at width 768/12L) —
+                    the grading-scale config; a few hundred steps is a
+                    real (if slow) CPU run and the intended TPU workload.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --preset smoke
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.preset == "smoke":
+        steps = args.steps or 200
+        argv = [
+            "--arch", "yi-6b", "--smoke", "--steps", str(steps),
+            "--seq", "128", "--batch", "8", "--lr", "3e-3",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        ]
+    else:
+        steps = args.steps or 300
+        argv = [
+            "--arch", "yi-6b", "--smoke", "--steps", str(steps),
+            "--seq", "256", "--batch", "8", "--lr", "1e-3",
+            "--d-model", "768", "--n-layers", "12",
+            "--microbatches", "2",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        ]
+    if args.resume:
+        argv.append("--resume")
+    losses = train_main(argv)
+    drop = losses[0] - losses[-1]
+    print(f"loss drop over run: {drop:.3f} "
+          f"({'LEARNING' if drop > 0.3 else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.  Usage:
+  PYTHONPATH=src python scripts/make_experiments_tables.py > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.analysis import load_cells  # noqa: E402
+
+ARCH_ORDER = [
+    "seamless-m4t-large-v2", "stablelm-12b", "yi-6b", "granite-8b",
+    "internlm2-20b", "deepseek-v3-671b", "qwen2-moe-a2.7b", "qwen2-vl-72b",
+    "jamba-v0.1-52b", "xlstm-350m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def fmt_b(x):
+    for unit, s in [(1e12, "TB"), (1e9, "GB"), (1e6, "MB"), (1e3, "KB")]:
+        if x >= unit:
+            return f"{x/unit:.2f}{s}"
+    return f"{x:.0f}B"
+
+
+def bottleneck_note(rec):
+    rf = rec["roofline"]
+    dom = rf["dominant"]
+    arch = rec["arch"]
+    if dom == "collective":
+        kinds = rec["collectives"]["per_kind"]
+        big = max(kinds, key=lambda k: kinds[k]["wire_bytes"]) if kinds else "?"
+        return (f"{big} traffic dominates — reduce cross-shard reshards "
+                f"(sharding/overlap change)")
+    if dom == "memory":
+        if rf["useful_ratio"] < 0.3:
+            return "HBM-bound with low useful compute — fuse/remat-policy + layout"
+        return "HBM-bound — raise arithmetic intensity (larger micro-tiles)"
+    return "compute-bound — already near the MXU roof; tighten schedule waste"
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    base = {}
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for rec in load_cells(outdir, mesh):
+            if rec.get("overrides"):
+                continue
+            base[(mesh, rec["arch"], rec["shape"])] = rec
+
+    print("### Dry-run matrix (status; compile proves the sharding is coherent)\n")
+    print("| arch | shape | 16x16 (256 chips) | 2x16x16 (512 chips) |")
+    print("|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = base.get(("pod16x16", a, s))
+            r2 = base.get(("pod2x16x16", a, s))
+
+            def cell(r):
+                if r is None:
+                    return "(pending)"
+                if r["status"] == "skip":
+                    return "SKIP (full-attn @500k)"
+                if r["status"] == "error":
+                    return "ERROR"
+                mem = r["memory"]
+                per_dev = mem["argument_size"] + mem["temp_size"]
+                return (f"OK — args+temp {fmt_b(per_dev)}/dev, "
+                        f"compile {r['seconds_compile']:.0f}s")
+
+            print(f"| {a} | {s} | {cell(r1)} | {cell(r2)} |")
+
+    print("\n### Roofline (single-pod 16x16, v5e: 197 TF/s bf16, 819 GB/s HBM,"
+          " 50 GB/s/link)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPS | useful | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            rec = base.get(("pod16x16", a, s))
+            if rec is None or rec["status"] != "ok":
+                continue
+            rf = rec["roofline"]
+            print(
+                f"| {a} | {s} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"**{rf['dominant']}** | {rf['model_flops']:.3g} | "
+                f"{rf['useful_ratio']:.2f} | {bottleneck_note(rec)} |"
+            )
+
+    tuned = {}
+    for rec in load_cells("experiments/dryrun_tuned", "pod16x16"):
+        tuned[(rec["arch"], rec["shape"])] = rec
+    if tuned:
+        print("\n### Baseline vs optimized-v1 (single-pod; §Perf defaults:"
+              " shard_map folded attention + per-family tp/mb tuning)\n")
+        print("| arch | shape | frac baseline | frac optimized | Δ | "
+              "dominant (opt) |")
+        print("|---|---|---|---|---|---|")
+        for a in ARCH_ORDER:
+            for s in SHAPE_ORDER:
+                r0 = base.get(("pod16x16", a, s))
+                r1 = tuned.get((a, s))
+                if not r0 or not r1 or r0["status"] != "ok" \
+                        or r1["status"] != "ok":
+                    continue
+                f0 = r0["roofline"]["roofline_fraction"]
+                f1 = r1["roofline"]["roofline_fraction"]
+                print(f"| {a} | {s} | {f0:.3g} | {f1:.3g} | "
+                      f"{f1/f0:.2f}x | {r1['roofline']['dominant']} |")
+
+    print("\n### Collective census (single-pod, wire bytes/chip/step)\n")
+    print("| arch | shape | all-reduce | all-gather | reduce-scatter | "
+          "all-to-all | collective-permute | total |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            rec = base.get(("pod16x16", a, s))
+            if rec is None or rec["status"] != "ok":
+                continue
+            per = rec["collectives"]["per_kind"]
+
+            def w(k):
+                return fmt_b(per[k]["wire_bytes"]) if k in per else "-"
+
+            print(f"| {a} | {s} | {w('all-reduce')} | {w('all-gather')} | "
+                  f"{w('reduce-scatter')} | {w('all-to-all')} | "
+                  f"{w('collective-permute')} | "
+                  f"{fmt_b(rec['collectives']['wire_bytes_per_chip'])} |")
+
+
+if __name__ == "__main__":
+    main()

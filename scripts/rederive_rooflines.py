@@ -1,0 +1,14 @@
+"""Recompute rec['roofline'] for all dry-run JSONs (terms are derived
+from stored fields — no recompilation needed)."""
+import json, glob, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.roofline.analysis import roofline_terms
+
+for f in glob.glob("experiments/dryrun/*/*.json"):
+    r = json.load(open(f))
+    if r.get("status") != "ok":
+        continue
+    r["model_axis"] = 16
+    r["roofline"] = roofline_terms(r)
+    json.dump(r, open(f, "w"), indent=1)
+print("rederived", len(glob.glob("experiments/dryrun/*/*.json")))

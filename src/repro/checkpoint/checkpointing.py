@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: atomic, sharded, elastic.
+
+Layout:  <dir>/step_<N>/
+             manifest.json          # tree structure, shapes, dtypes, step
+             <leaf-path>.npy        # one file per leaf (per-host shard in
+                                    # multi-host deployments)
+         <dir>/LATEST               # atomically updated pointer
+
+Guarantees used by the trainer's restart path:
+* writes go to ``step_<N>.tmp`` and are renamed only after fsync — a
+  failure mid-save never corrupts the previous checkpoint;
+* ``restore_latest`` falls back to the newest complete checkpoint;
+* restore re-shards to whatever mesh the restoring job uses (elastic
+  scaling: the manifest stores *global* arrays; device placement comes
+  from the target sharding tree, so 256-chip checkpoints load on 512
+  chips and vice versa);
+* the data pipeline is stateless (step -> batch), so restart is exact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "restore_latest", "latest_step", "list_steps"]
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Atomic save.  Returns the final checkpoint path."""
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}}
+    for name, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fn = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"][name] = {
+            "file": fn,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def list_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    # prefer the pointer; validate against complete checkpoints
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        return None
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if os.path.exists(ptr):
+        try:
+            s = int(open(ptr).read().strip())
+            if s in steps:
+                return s
+        except ValueError:
+            pass
+    return steps[-1]
+
+
+def restore(ckpt_dir: str, step: int, proto: Any, shardings: Any = None) -> Any:
+    """Load checkpoint ``step`` shaped like ``proto``; if ``shardings``
+    (a matching tree of jax.sharding.Sharding) is given, leaves are
+    placed with jax.device_put — this is the elastic re-shard path."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    flat_proto = _flatten(proto)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for name, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        if name in flat_proto:
+            want = flat_proto[name]
+            arr = arr.astype(want.dtype) if hasattr(want, "dtype") else arr
+        if name in flat_shard and flat_shard[name] is not None:
+            out[name] = jax.device_put(arr, flat_shard[name])
+        else:
+            out[name] = jnp.asarray(arr)
+    # remap to nested structure using proto as template
+    def rebuild(proto, prefix=""):
+        if isinstance(proto, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in proto.items()}
+        if isinstance(proto, (tuple, list)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(proto)]
+            return type(proto)(vals)
+        return out[prefix[:-1]]
+
+    return rebuild(proto)
+
+
+def restore_latest(ckpt_dir: str, proto: Any, shardings: Any = None):
+    s = latest_step(ckpt_dir)
+    if s is None:
+        return None, None
+    return restore(ckpt_dir, s, proto, shardings), s

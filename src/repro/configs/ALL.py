@@ -1,0 +1,40 @@
+"""Import side-effect: registers all ten assigned architectures."""
+
+from . import (  # noqa: F401
+    deepseek_v3_671b,
+    granite_8b,
+    internlm2_20b,
+    jamba_v01_52b,
+    qwen2_moe_a27b,
+    qwen2_vl_72b,
+    seamless_m4t_large_v2,
+    stablelm_12b,
+    xlstm_350m,
+    yi_6b,
+)
+
+ARCH_IDS = [
+    "seamless-m4t-large-v2",
+    "stablelm-12b",
+    "yi-6b",
+    "granite-8b",
+    "internlm2-20b",
+    "deepseek-v3-671b",
+    "qwen2-moe-a2.7b",
+    "qwen2-vl-72b",
+    "jamba-v0.1-52b",
+    "xlstm-350m",
+]
+
+REDUCED = {
+    "seamless-m4t-large-v2": seamless_m4t_large_v2.reduced,
+    "stablelm-12b": stablelm_12b.reduced,
+    "yi-6b": yi_6b.reduced,
+    "granite-8b": granite_8b.reduced,
+    "internlm2-20b": internlm2_20b.reduced,
+    "deepseek-v3-671b": deepseek_v3_671b.reduced,
+    "qwen2-moe-a2.7b": qwen2_moe_a27b.reduced,
+    "qwen2-vl-72b": qwen2_vl_72b.reduced,
+    "jamba-v0.1-52b": jamba_v01_52b.reduced,
+    "xlstm-350m": xlstm_350m.reduced,
+}

@@ -1,0 +1,1 @@
+"""Assigned architecture configs; importing .ALL registers all ten."""

@@ -1,0 +1,206 @@
+"""Architecture configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig`` built in its own
+module under ``repro/configs/`` with the exact numbers from the
+assignment, plus a ``reduced()`` variant used by CPU smoke tests.
+``REGISTRY`` maps ``--arch <id>`` names to configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+__all__ = [
+    "LayerSpec",
+    "MoECfg",
+    "MLACfg",
+    "MambaCfg",
+    "XLSTMCfg",
+    "ArchConfig",
+    "REGISTRY",
+    "register",
+    "get_config",
+    "SHAPES",
+    "ShapeCfg",
+]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a (possibly heterogeneous) period pattern."""
+
+    mixer: str = "attn"  # attn | mamba | mlstm | slstm
+    ffn: str = "dense"  # dense | moe | none
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    expert_ff: int
+    n_shared: int = 0
+    shared_ff: int = 0  # total ff of the shared expert(s)
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # softmax | sigmoid (deepseek-v3)
+    aux_loss_weight: float = 0.001
+    impl: str = "tp"  # tp: expert-ff sharded over model | ep: experts over model
+
+
+@dataclass(frozen=True)
+class MLACfg:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class MambaCfg:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMCfg:
+    n_heads: int = 4
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 4.0 / 3.0
+    d_conv: int = 4
+    chunk: int = 64  # chunkwise-parallel mLSTM chunk length
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # layer pattern: the model is scan(period) x (n_layers/len(period)),
+    # after ``n_prefix`` unrolled prefix layers (deepseek dense head).
+    period: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    n_prefix: int = 0
+    prefix_spec: Tuple[LayerSpec, ...] = ()
+    attention: str = "gqa"  # gqa | mla
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    mamba: Optional[MambaCfg] = None
+    xlstm: Optional[XLSTMCfg] = None
+    rope_theta: float = 1_000_000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    # enc-dec (seamless): encoder_layers > 0 adds a bidirectional encoder
+    # (stubbed modality frontend feeds it frame embeddings directly).
+    encoder_layers: int = 0
+    # vlm stub: n_patches of precomputed patch embeddings prepended
+    n_patches: int = 0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    mtp: bool = False  # DeepSeek-V3 multi-token prediction head
+    act_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    sub_quadratic: bool = False  # may run long_500k
+    optimizer: str = "adamw"  # adamw | adafactor (big archs)
+    remat: str = "full"  # none | full | dots
+    attention_chunk: int = 512  # XLA chunked-attention tile
+    attention_schedule: str = "folded"  # folded (simplex) | bb (baseline)
+    # tensor-parallel width on the 'model' mesh axis.  16 = full TP
+    # (default); 1 = fold the axis into FSDP/DP (right-sizes small
+    # models: a 6B model on 256 chips needs no TP — §Perf iteration A2).
+    tp_size: int = 16
+    # overrides the shape's grad-accum microbatch count when > 0 (§Perf)
+    microbatches_override: int = 0
+    # dtype in which FSDP all-gathers move parameters ("bfloat16" halves
+    # gather wire bytes; master copy stays param_dtype — §Perf A4)
+    gather_dtype: str = "float32"
+    # MoE distribution override: "" = MoECfg.impl; "ep" = expert parallel
+    # (experts over 'model', token all-to-all); "tp" = expert-ff sharding
+    moe_impl: str = ""
+    # decode/prefill: keep weights resident (sharded over 'model' only,
+    # replicated over dp) instead of ZeRO-3 — otherwise every decoded
+    # token re-gathers the entire model (§Perf D1: jamba long_500k spends
+    # 10.5 GB/token of wire on FSDP gathers).  Train keeps ZeRO-3.
+    weights_resident_serve: bool = True
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_periods(self) -> int:
+        body = self.n_layers - self.n_prefix
+        assert body % len(self.period) == 0, (self.name, body, len(self.period))
+        return body // len(self.period)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Total parameters (exact, from abstract init)."""
+        import jax
+
+        from repro.models.model import Model
+
+        m = Model(self)
+        shapes = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+        return sum(
+            int(__import__("numpy").prod(x.shape))
+            for x in jax.tree_util.tree_leaves(shapes)
+        )
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE-aware), for MODEL_FLOPS."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        # subtract the inactive routed-expert fraction
+        import numpy as np
+
+        moe_layers = 0
+        specs = list(self.prefix_spec) + list(self.period) * self.n_periods
+        for s in specs:
+            moe_layers += s.ffn == "moe"
+        per_expert = 3 * self.d_model * self.moe.expert_ff
+        routed_total = moe_layers * self.moe.n_experts * per_expert
+        routed_active = moe_layers * self.moe.top_k * per_expert
+        return total - routed_total + routed_active
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+    microbatches: int = 1
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train", microbatches=8),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    from . import ALL  # noqa: F401  (forces registration)
+
+    return REGISTRY[name]

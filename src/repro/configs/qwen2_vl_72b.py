@@ -1,0 +1,31 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191;
+hf].  80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.  Vision
+frontend is a STUB: input_specs provides n_patches=1024 precomputed
+patch embeddings (32x32 grid) prepended to the text tokens; M-RoPE
+sections (16, 24, 24) over head_dim/2 = 64 frequency slots."""
+
+from .base import ArchConfig, LayerSpec, register
+
+FULL = register(ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab=152064,
+    period=(LayerSpec("attn", "dense"),),
+    mrope_sections=(16, 24, 24),
+    n_patches=1024,
+    optimizer="adafactor",
+    source="arXiv:2409.12191; hf",
+))
+
+
+def reduced() -> ArchConfig:
+    return FULL.replace(
+        name="qwen2-vl-72b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=512, n_patches=16,
+        mrope_sections=(4, 2, 2), attention_chunk=32,
+    )

@@ -1,0 +1,30 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec multimodal backbone
+[arXiv:2308.11596; hf].  24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206.  The speech/audio frontend is a STUB: input_specs provides
+precomputed frame embeddings of width d_model to the encoder."""
+
+from .base import ArchConfig, LayerSpec, register
+
+FULL = register(ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,                    # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    period=(LayerSpec("attn", "dense"),),
+    rope_theta=10_000.0,
+    optimizer="adamw",
+    source="arXiv:2308.11596; hf",
+))
+
+
+def reduced() -> ArchConfig:
+    return FULL.replace(
+        name="seamless-m4t-large-v2-smoke", n_layers=2, encoder_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+        attention_chunk=32,
+    )

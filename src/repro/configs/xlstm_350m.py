@@ -1,0 +1,36 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517;
+unverified].  24L d_model=1024 4H vocab=50304; d_ff=0 in the assignment
+means the blocks carry their own projections (mLSTM proj x2, sLSTM FFN
+x4/3), per the xLSTM paper.  Ratio 7:1 mLSTM:sLSTM per 8-block period.
+Sub-quadratic: constant-size recurrent state; runs long_500k."""
+
+from .base import ArchConfig, LayerSpec, XLSTMCfg, register
+
+_PERIOD = tuple(
+    LayerSpec("slstm" if i == 3 else "mlstm", "none") for i in range(8)
+)
+
+FULL = register(ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    xlstm=XLSTMCfg(n_heads=4, chunk=64),
+    period=_PERIOD,
+    sub_quadratic=True,
+    optimizer="adamw",
+    source="arXiv:2405.04517",
+))
+
+
+def reduced() -> ArchConfig:
+    return FULL.replace(
+        name="xlstm-350m-smoke", n_layers=8, d_model=64, vocab=512,
+        n_heads=4, n_kv_heads=4,
+        xlstm=FULL.xlstm.__class__(n_heads=4, chunk=16),
+        attention_chunk=32,
+    )

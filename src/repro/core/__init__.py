@@ -1,0 +1,34 @@
+"""Core library: the paper's m-simplex block-space maps and schedules."""
+
+from . import general_m, hmap, maps_baseline, schedule, simplex, trapezoids
+from .hmap import (
+    hmap2,
+    hmap2_full,
+    hmap2_inverse,
+    hmap3_octant,
+    hmap3_paper,
+    pow2_floor,
+)
+from .schedule import Schedule2D, folded_causal_pairs, grid_steps
+from .simplex import simplex_volume, tet, tri
+
+__all__ = [
+    "general_m",
+    "hmap",
+    "maps_baseline",
+    "schedule",
+    "simplex",
+    "trapezoids",
+    "hmap2",
+    "hmap2_full",
+    "hmap2_inverse",
+    "hmap3_octant",
+    "hmap3_paper",
+    "pow2_floor",
+    "Schedule2D",
+    "folded_causal_pairs",
+    "grid_steps",
+    "simplex_volume",
+    "tet",
+    "tri",
+]

@@ -1,0 +1,318 @@
+"""The paper's block-space map  H : Z^m -> Z^m  (§4).
+
+Everything here is expressed with integer / bit operations only
+(Definition 4.1): no roots, no float transcendentals.  All functions are
+*dual-backend*: they accept either numpy arrays / python ints (host-side
+grid construction, oracles) or jax tracers (usable inside
+``pl.BlockSpec`` index_maps and kernel bodies).
+
+2-simplex (Thm 4.3, verified bijection)
+---------------------------------------
+Grid (super-orthotope) ``Pi^2_{n/2, n-1}``, block coordinate
+``w = (wx, wy)`` with ``wx in [0, n/2)``, ``wy in [1, n-1]``:
+
+    b = 2^floor(log2 wy)          (Eq. 14, via clz — Eq. 17/18)
+    q = wx // b                   (Eq. 15)
+    H(w) = (wx + q*b, wy + 2*q*b) (Eq. 16)
+
+maps bijectively onto the strict lower triangle {(x, y): 0 <= x < y <= n-1}
+(n a power of two).  ``V(Pi) = n/2 * (n-1) = V(Delta^2_{n-1})`` — zero waste.
+
+Zero-waste inclusive-diagonal extension (ours)
+----------------------------------------------
+The paper leaves ``wy = 0`` undefined (log2).  We use it: grid
+``(n/2, n+1)`` where row 0 carries the first half of the diagonal and row
+``n`` the second half — a bijection onto {(x, y): x <= y <= n-1} with
+*exactly* ``n(n+1)/2`` grid blocks.  This is the form used by the causal
+attention and simplex kernels (diagonal tiles are the only ones needing
+an intra-tile mask, and they are identified by the grid row — no
+per-tile predicate anywhere).
+
+3-simplex
+---------
+``hmap3_paper`` implements Eq. 26 literally.  Calibration (see
+``tests/test_hmap_3simplex.py`` and DESIGN.md) shows the printed equation
+is under-determined by the text (~30% coverage under the literal reading,
+geometry lives in the paper's figures).  The production 3D scheduler is
+``hmap3_octant`` — an *exact* self-similar map (r=1/2, beta=3 octant
+recursion; same machinery, provably bijective) — plus the table-driven
+scheduler in ``core/schedule.py`` (0% waste, the TPU-idiomatic form).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import numpy as np
+
+__all__ = [
+    "pow2_floor",
+    "floor_log2",
+    "hmap2",
+    "hmap2_full",
+    "hmap2_inverse",
+    "hmap2_grid_shape",
+    "hmap2_full_grid_shape",
+    "hmap3_paper",
+    "hmap3_paper_grid_shape",
+    "octant_levels",
+    "hmap3_octant",
+    "hmap3_octant_grid_size",
+]
+
+
+def _is_jax(*xs: Any) -> bool:
+    for x in xs:
+        if type(x).__module__.startswith("jax"):
+            return True
+    return False
+
+
+def pow2_floor(y):
+    """Largest power of two <= y  (y >= 1).  Bit-smear: Eq. 14 without logs.
+
+    Works identically for numpy ints/arrays and jax tracers (int32/int64).
+    On TPU the jax path could equivalently use ``1 << (31 - lax.clz(y))``
+    (Eq. 17/18); the smear lowers to the same scalar-unit ops and is
+    backend-agnostic, so it is the default.
+    """
+    y = y | (y >> 1)
+    y = y | (y >> 2)
+    y = y | (y >> 4)
+    y = y | (y >> 8)
+    y = y | (y >> 16)
+    return y - (y >> 1)
+
+
+def floor_log2(y):
+    """floor(log2(y)) via clz when traced by jax (Eq. 17), bit_length on host."""
+    if _is_jax(y):
+        import jax.numpy as jnp
+        from jax import lax
+
+        y32 = jnp.asarray(y, dtype=jnp.int32)
+        return (31 - lax.clz(y32)).astype(jnp.int32)
+    y_arr = np.asarray(y)
+    if y_arr.ndim == 0:
+        return int(y_arr).bit_length() - 1
+    out = np.frompyfunc(lambda v: int(v).bit_length() - 1, 1, 1)(y_arr)
+    return out.astype(np.int64)
+
+
+def hmap2(wx, wy) -> Tuple[Any, Any]:
+    """Eq. 14-16: super-orthotope block (wx, wy) -> strict lower triangle.
+
+    Domain: wx in [0, n/2), wy in [1, n-1], n a power of two.
+    Image:  {(x, y) : 0 <= x < y <= n-1}, bijective.
+    """
+    b = pow2_floor(wy)
+    q = wx // b
+    return wx + q * b, wy + 2 * q * b
+
+
+def hmap2_full(wx, wy, n: int) -> Tuple[Any, Any]:
+    """Zero-waste inclusive-diagonal map: grid (n/2, n+1) -> {x <= y <= n-1}.
+
+    Branchless (select-based) so it is usable inside Pallas index_maps.
+    Row 0:   (wx, wx)                 — first half of the diagonal
+    Row n:   (n/2 + wx, n/2 + wx)     — second half of the diagonal
+    Rows 1..n-1: Eq. 16 strict map.
+    """
+    if _is_jax(wx, wy):
+        import jax.numpy as jnp
+
+        wy_safe = jnp.where((wy >= 1) & (wy <= n - 1), wy, 1)
+        x_s, y_s = hmap2(wx, wy_safe)
+        diag0 = wy == 0
+        diagn = wy == n
+        x = jnp.where(diag0, wx, jnp.where(diagn, n // 2 + wx, x_s))
+        y = jnp.where(diag0, wx, jnp.where(diagn, n // 2 + wx, y_s))
+        return x, y
+    wx = np.asarray(wx)
+    wy = np.asarray(wy)
+    wy_safe = np.where((wy >= 1) & (wy <= n - 1), wy, 1)
+    x_s, y_s = hmap2(wx, wy_safe)
+    diag0 = wy == 0
+    diagn = wy == n
+    x = np.where(diag0, wx, np.where(diagn, n // 2 + wx, x_s))
+    y = np.where(diag0, wx, np.where(diagn, n // 2 + wx, y_s))
+    return x, y
+
+
+def hmap2_inverse(x, y) -> Tuple[Any, Any]:
+    """Inverse of ``hmap2`` (strict lower triangle -> super-orthotope).
+
+    The level-b orthotope q covers data x in [2qb, (2q+1)b),
+    y in [(2q+1)b, (2q+2)b): x and y share all bits above position
+    log2(b) and differ exactly at that bit (the HODLR block-pair
+    identity), so  b = pow2_floor(x XOR y),  q = x // (2b).
+    Integer/bit ops only.
+    """
+    b = pow2_floor(x ^ y)
+    q = x // (2 * b)
+    return x - q * b, y - 2 * q * b
+
+
+def hmap2_grid_shape(n: int) -> Tuple[int, int]:
+    """(width, height) of the strict-map super-orthotope Pi^2_{n/2, n-1}."""
+    return n // 2, n - 1
+
+
+def hmap2_full_grid_shape(n: int) -> Tuple[int, int]:
+    """(width, height) of the zero-waste inclusive-diagonal grid."""
+    return n // 2, n + 1
+
+
+# ---------------------------------------------------------------------------
+# 3-simplex
+# ---------------------------------------------------------------------------
+
+
+def hmap3_paper_grid_shape(n: int) -> Tuple[int, int, int]:
+    """Pi^3_{n/2, n/2, 3(n-1)/4} (Thm 4.6)."""
+    return n // 2, n // 2, 3 * (n - 1) // 4 + 1
+
+
+def hmap3_paper(wx, wy, wz, n: int):
+    """Eq. 26, literal reading.  Returns (x, y, z, valid).
+
+    The text under-determines the packing geometry (see module docstring);
+    this literal form is kept for the calibration benchmark.  ``valid`` is
+    1 where the candidate position lands inside T(n) = {sum < n} and no
+    case matched twice; callers must predicate on it.
+    """
+    xp: Any
+    if _is_jax(wx, wy, wz):
+        import jax.numpy as jnp
+
+        xp = jnp
+    else:
+        xp = np
+        wx, wy, wz = np.asarray(wx), np.asarray(wy), np.asarray(wz)
+    half = n // 2
+    wy_safe = xp.where(wy >= 1, wy, 1)
+    b = pow2_floor(wy_safe)
+    q = wx // b
+    # case 1: the displaced major cube, h(w) = w + (0, n/2, 0)
+    c1 = wz < half
+    x1, y1, z1 = wx, wy + half, wz
+    # case 2: direct self-similar placement
+    x2, y2, z2 = wx + q * b, wy + 2 * q * b, wz - half
+    in2 = (x2 + y2 + z2) < n
+    # case 3: hinge reflection for blocks outside Delta
+    x3 = b * (1 + 2 * q) - wx
+    y3 = 2 * b * (1 + q) - wy
+    z3 = 2 * b - wz + half
+    x = xp.where(c1, x1, xp.where(in2, x2, x3))
+    y = xp.where(c1, y1, xp.where(in2, y2, y3))
+    z = xp.where(c1, z1, xp.where(in2, z2, z3))
+    valid = (x >= 0) & (y >= 0) & (z >= 0) & ((x + y + z) < n)
+    return x, y, z, valid
+
+
+# ---------------------------------------------------------------------------
+# Exact 3-simplex map: octant recursion (r = 1/2, beta = 3), ours.
+#
+#   T(n) = (cube [0,n/2)^3  ∩ T(n))  ⊎  (T(n/2)+n/2·e_x)
+#                                    ⊎  (T(n/2)+n/2·e_y)
+#                                    ⊎  (T(n/2)+n/2·e_z)
+#
+# (exact partition — proof: a point with x >= n/2 satisfies
+#  (x-n/2)+y+z < n/2 iff x+y+z < n, and two coordinates >= n/2 would
+#  violate sum < n; verified constructively in tests).
+#
+# Flattened: level k = 1..K-1 has 3^(k-1) cubes of side s_k = n/2^k
+# (the near-cube of a T(n/2^(k-1)) sub-tetra; cells with local sum >=
+# 2*s_k are the dead far-corner hole, a <=1/6 fraction).  The terminal
+# level K has 3^(K-1) cubes of side 2 covering their T(2) sub-tetra
+# *entirely* (4 of 8 cells valid).  Total grid ~ n^3/5 vs V = n^3/6
+# (~20% extra, vs +500% for BB).  All index arithmetic is integer ops
+# with a fixed <= 30-level unroll.
+# ---------------------------------------------------------------------------
+
+
+def octant_levels(n: int) -> int:
+    """Number of levels K = log2(n); the terminal level has side-2 cubes."""
+    assert n >= 2 and (n & (n - 1)) == 0, "octant map requires power-of-two n"
+    return n.bit_length() - 1
+
+
+def _octant_level_sizes(n: int):
+    """Per-level (count, side) pairs; terminal level has side 2."""
+    K = octant_levels(n)
+    out = []
+    for k in range(1, K):
+        out.append((3 ** (k - 1), n >> k))
+    out.append((3 ** (K - 1), 2))  # terminal: covers T(2) fully
+    return out
+
+
+def hmap3_octant_grid_size(n: int) -> int:
+    """Total grid cells (~n^3/5)."""
+    return sum(cnt * side**3 for cnt, side in _octant_level_sizes(n))
+
+
+def _octant_level_prefix(n: int):
+    sizes = [cnt * side**3 for cnt, side in _octant_level_sizes(n)]
+    prefix = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    return sizes, prefix
+
+
+def hmap3_octant(idx, n: int):
+    """Exact linear-grid 3-simplex map: idx in [0, grid_size) -> (x,y,z,valid).
+
+    Bijective onto T(n) = {x+y+z < n} over the valid cells; dead cells
+    (valid=0) are the far-corner holes (<=1/6 of the grid).  Dual-backend.
+    """
+    if _is_jax(idx):
+        import jax.numpy as jnp
+
+        xp = jnp
+        idx = jnp.asarray(idx)  # int32 suffices for block-space grids
+    else:
+        xp = np
+        idx = np.asarray(idx, dtype=np.int64)
+    K = octant_levels(n)
+    level_specs = _octant_level_sizes(n)
+    _, prefix = _octant_level_prefix(n)
+
+    # level of this cell: fixed unroll over K levels (K <= 30)
+    level = xp.zeros_like(idx)
+    for k in range(1, K):
+        level = xp.where(idx >= prefix[k], level + 1, level)
+    base = xp.zeros_like(idx)
+    s = xp.zeros_like(idx)
+    bound = xp.zeros_like(idx)
+    for l, (_, side) in enumerate(level_specs):
+        base = xp.where(level == l, prefix[l], base)
+        s = xp.where(level == l, side, s)
+        # standard levels: valid iff local sum < 2*side (sub-tetra bound);
+        # terminal level: the side-2 cube covers T(2), valid iff sum < 2.
+        terminal = l == K - 1
+        bound = xp.where(level == l, 2 if terminal else 2 * side, bound)
+    rem = idx - base
+    s3 = s * s * s
+    c = rem // s3
+    p = rem - c * s3
+    pz = p // (s * s)
+    py = (p - pz * s * s) // s
+    px = p - pz * s * s - py * s
+    # offset from ternary path digits of c: digit j (0-based, j < level)
+    # chooses axis for a displacement of n >> (j+1).
+    ox = xp.zeros_like(idx)
+    oy = xp.zeros_like(idx)
+    oz = xp.zeros_like(idx)
+    cc = c
+    for j in range(K - 1):
+        active = j < level
+        d = cc % 3
+        step = idx.dtype.type(n >> (j + 1)) if xp is np else (n >> (j + 1))
+        ox = xp.where(active & (d == 0), ox + step, ox)
+        oy = xp.where(active & (d == 1), oy + step, oy)
+        oz = xp.where(active & (d == 2), oz + step, oz)
+        cc = xp.where(active, cc // 3, cc)
+    x = ox + px
+    y = oy + py
+    z = oz + pz
+    valid = (px + py + pz) < bound
+    return x, y, z, valid

@@ -1,0 +1,188 @@
+"""State-of-the-art comparison maps from the paper (§3, §5, Fig. 9).
+
+* BB  — bounding box, f(x) = x with a discard predicate (Eq. 2).
+* RB  — rectangular box [37] (Jung & O'Leary): fold the lower triangle
+        into an (n+1)/2 x n rectangle.
+* LAMBDA — the enumeration map lambda(omega) [22, 24] (Navarro et al.):
+        recovers 2D/3D coordinates of the i-th simplex element from the
+        closed-form inversion of the simplicial number — requires square
+        (2-simplex) or cube (3-simplex) roots; FP precision limits the
+        valid range exactly as the paper describes (§3: n <= 62900 for
+        FP32 2-simplex / n <= 1546 for 3-simplex before FP64 is needed).
+* DP  — CUDA dynamic parallelism has **no TPU analogue** (no device-side
+        grid launch); documented in DESIGN.md, not implemented.
+
+All maps are dual-backend (numpy / jax tracers) like ``hmap``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import numpy as np
+
+__all__ = [
+    "bb_map2",
+    "bb_valid2",
+    "bb_map3",
+    "bb_valid3",
+    "rb_map2",
+    "rb_grid_shape",
+    "lambda_map2",
+    "lambda_map3",
+    "lambda_fp32_exact_range_2d",
+]
+
+
+def _xp(*xs: Any):
+    for x in xs:
+        if type(x).__module__.startswith("jax"):
+            import jax.numpy as jnp
+
+            return jnp
+    return np
+
+
+# --------------------------------------------------------------------------
+# Bounding box
+# --------------------------------------------------------------------------
+
+
+def bb_map2(wx, wy) -> Tuple[Any, Any]:
+    """Identity map (Eq. 2); used with ``bb_valid2`` as run-time filter."""
+    return wx, wy
+
+
+def bb_valid2(x, y):
+    """Inclusive lower-triangle predicate {x <= y} discarding ~n^2/2 blocks."""
+    return x <= y
+
+
+def bb_map3(wx, wy, wz) -> Tuple[Any, Any, Any]:
+    return wx, wy, wz
+
+
+def bb_valid3(x, y, z, n: int):
+    """T(n) predicate; discards ~5/6 of the n^3 bounding box."""
+    return (x + y + z) < n
+
+
+# --------------------------------------------------------------------------
+# Rectangular box (RB) [37]
+# --------------------------------------------------------------------------
+
+
+def rb_grid_shape(n: int) -> Tuple[int, int]:
+    """Grid (width, height) covering the inclusive lower triangle of n x n.
+
+    n even: (n/2, n+1) — same zero-waste volume as hmap2_full.
+    """
+    assert n % 2 == 0, "RB fold here assumes even n (block counts are even)"
+    return n // 2, n + 1
+
+
+def rb_map2(wx, wy, n: int) -> Tuple[Any, Any]:
+    """RB fold over grid (n/2, n+1), wy in [0, n]:
+
+        wy >  wx:  (x, y) = (wx, wy - 1)                [direct left half]
+        wy <= wx:  (x, y) = (n/2 + wy, n/2 + wx)        [folded right half]
+
+    The missing right-half tiles {x >= n/2, x <= y} form an inclusive
+    upper triangle of side n/2 — exactly the fold region {wy <= wx}.
+    Bijective onto {x <= y <= n-1} (verified in tests).  One comparison +
+    adds: O(1), exact, but 2-simplex only — the paper discards RB for
+    3-simplices (§5.3).
+    """
+    xp = _xp(wx, wy)
+    fold = wy <= wx
+    x = xp.where(fold, n // 2 + wy, wx)
+    y = xp.where(fold, n // 2 + wx, wy - 1)
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# Lambda enumeration map [22, 24]
+# --------------------------------------------------------------------------
+
+
+def lambda_map2(w, dtype=np.float32) -> Tuple[Any, Any]:
+    """lambda(w): Z -> Z^2 via the triangular-number inversion.
+
+    Element w (0-based) of the inclusive lower triangle maps to
+        y = floor( (sqrt(8w + 1) - 1) / 2 ),   x = w - y(y+1)/2.
+    The square root is computed in ``dtype`` — FP32 reproduces the paper's
+    precision failure beyond n ~ 62900 (the TITAN RTX discussion, §5.2).
+    """
+    xp = _xp(w)
+    wf = xp.asarray(w).astype(dtype)
+    y = xp.floor((xp.sqrt(dtype(8.0) * wf + dtype(1.0)) - dtype(1.0)) / dtype(2.0))
+    y = y.astype(xp.int64 if xp is np else xp.asarray(w).dtype)
+    # one Newton correction step in integer space guards the FP boundary
+    # (the paper's maps apply the analogous epsilon correction)
+    tri_y = y * (y + 1) // 2
+    y = xp.where(tri_y > xp.asarray(w), y - 1, y)
+    tri_y = y * (y + 1) // 2
+    over = xp.asarray(w) - tri_y > y
+    y = xp.where(over, y + 1, y)
+    tri_y = y * (y + 1) // 2
+    x = xp.asarray(w) - tri_y
+    return x, y
+
+
+def lambda_map2_raw(w, dtype=np.float32) -> Tuple[Any, Any]:
+    """Uncorrected lambda map — exhibits the raw FP32 failure range."""
+    xp = _xp(w)
+    wf = xp.asarray(w).astype(dtype)
+    y = xp.floor((xp.sqrt(dtype(8.0) * wf + dtype(1.0)) - dtype(1.0)) / dtype(2.0))
+    y = y.astype(np.int64) if xp is np else y.astype("int32")
+    x = xp.asarray(w) - y * (y + 1) // 2
+    return x, y
+
+
+def lambda_fp32_exact_range_2d() -> int:
+    """Largest n for which the *uncorrected* FP32 lambda map is exact.
+
+    Computed by direct scan (used by a test to reproduce the paper's
+    'map is accurate only in a bounded range' claim qualitatively).
+    """
+    n = 1
+    step = 4096
+    while True:
+        w = np.arange(tri_total(n + step) - 10, tri_total(n + step), dtype=np.int64)
+        x, y = lambda_map2_raw(w)
+        ok = np.all((x >= 0) & (x <= y))
+        if not ok:
+            return n
+        n += step
+        if n > (1 << 20):
+            return n
+
+
+def tri_total(n: int) -> int:
+    return n * (n + 1) // 2
+
+
+def lambda_map3(w, dtype=np.float64) -> Tuple[Any, Any, Any]:
+    """lambda_3(w): Z -> Z^3 via tetrahedral-number inversion (cube root).
+
+    Solves z from w = z(z+1)(z+2)/6 using the real root of the cubic
+    (paper [23, 24]); requires cbrt — the numerically fragile part the
+    paper's H map eliminates.  Integer-corrected like lambda_map2.
+    NOTE [24] maps onto the *order* simplex i<j<k; here we compose with
+    the prefix-difference bijection to land on the standard simplex.
+    """
+    xp = _xp(w)
+    wf = xp.asarray(w).astype(dtype)
+    # invert v = z(z+1)(z+2)/6 ~ (z+1)^3/6  =>  z ~ cbrt(6v) - 1
+    z = xp.floor(xp.cbrt(dtype(6.0) * wf + dtype(1.0)) - dtype(1.0))
+    z = z.astype(np.int64) if xp is np else z.astype("int32")
+    tet_z = z * (z + 1) * (z + 2) // 6
+    z = xp.where(tet_z > xp.asarray(w), z - 1, z)
+    tet_z = z * (z + 1) * (z + 2) // 6
+    over = xp.asarray(w) - tet_z >= (z + 1) * (z + 2) // 2
+    z = xp.where(over, z + 1, z)
+    tet_z = z * (z + 1) * (z + 2) // 6
+    rem = xp.asarray(w) - tet_z
+    x2, y2 = lambda_map2(rem, dtype=np.float32 if dtype == np.float32 else np.float64)
+    # (x2 <= y2 <= z) is the order simplex; prefix-difference to standard:
+    return x2, y2 - x2, z - y2

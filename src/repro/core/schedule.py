@@ -1,0 +1,166 @@
+"""Grid schedules: how a Pallas/TPU grid walks a simplex domain.
+
+This is the hardware-adaptation layer (DESIGN.md §2): on TPU the paper's
+"thread map" becomes the *grid -> data-tile schedule*, realized either as
+pure index arithmetic inside a ``BlockSpec.index_map`` (the faithful H
+form) or as small scalar-prefetch coordinate tables (the TPU-idiomatic
+exact form — one int32 per block, fetched by the scalar core, negligible
+next to tile compute).
+
+Schedules provided
+------------------
+* ``Schedule2D('hmap' | 'rb' | 'bb')``        — 2-simplex tile walks
+* ``schedule3d_table`` / ``'octant'`` / 'bb'  — 3-simplex tile walks
+* ``folded_causal_pairs``                     — the load-balanced causal
+  sequence-parallel partition: query-tile i pairs with n-1-i so every
+  pair owns (n+1) KV tiles — equal triangle *area* per shard.  This is
+  the paper's parallel-space-balancing argument applied to sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from . import hmap as H
+from .simplex import tet, tri
+
+__all__ = [
+    "Schedule2D",
+    "schedule2d_table",
+    "schedule3d_table",
+    "folded_causal_pairs",
+    "grid_steps",
+]
+
+
+@dataclass(frozen=True)
+class Schedule2D:
+    """A walk over the inclusive lower triangle of an n x n tile grid.
+
+    kind='hmap':  zero-waste (n/2, n+1) grid, paper Eq. 14-16 + our
+                  diagonal rows; tile = (col, row) with col <= row.
+    kind='rb':    zero-waste (n/2, n+1) grid, RB fold [37].  Row-major
+                  consecutive KV visits per query tile — the schedule the
+                  flash-attention kernel uses (running softmax needs
+                  consecutive visits; see kernels/flash_attention.py).
+    kind='bb':    (n, n) bounding box + validity predicate (the baseline).
+    """
+
+    n: int
+    kind: str = "hmap"
+
+    def __post_init__(self):
+        assert self.kind in ("hmap", "rb", "bb")
+        if self.kind == "hmap":
+            assert self.n >= 2 and (self.n & (self.n - 1)) == 0, (
+                "hmap needs power-of-two n (paper §4.1); use the "
+                "trapezoid decomposition (§4.2) for general n"
+            )
+        if self.kind == "rb":
+            assert self.n % 2 == 0 and self.n >= 2
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        if self.kind == "bb":
+            return self.n, self.n
+        return self.n // 2, self.n + 1
+
+    @property
+    def steps(self) -> int:
+        w, h = self.grid
+        return w * h
+
+    @property
+    def useful(self) -> int:
+        return tri(self.n)
+
+    def map(self, wx, wy):
+        """(wx, wy) -> (col, row, valid); dual-backend, branchless."""
+        if self.kind == "hmap":
+            x, y = H.hmap2_full(wx, wy, self.n)
+            valid = _ones_like(x)
+            return x, y, valid
+        if self.kind == "rb":
+            from .maps_baseline import rb_map2
+
+            x, y = rb_map2(wx, wy, self.n)
+            valid = _ones_like(x)
+            return x, y, valid
+        x, y = wx, wy
+        return x, y, x <= y
+
+    def table(self) -> np.ndarray:
+        """Host-side (steps, 3) int32 table of (col, row, valid)."""
+        w, h = self.grid
+        wy, wx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+        x, y, v = self.map(wx.ravel(), wy.ravel())
+        return np.stack(
+            [np.asarray(x), np.asarray(y), np.asarray(v).astype(np.int64)], 1
+        ).astype(np.int32)
+
+
+def _ones_like(x):
+    if type(x).__module__.startswith("jax"):
+        import jax.numpy as jnp
+
+        return jnp.ones_like(x, dtype=bool)
+    return np.ones_like(np.asarray(x), dtype=bool)
+
+
+def schedule2d_table(n: int) -> np.ndarray:
+    """Exact (tri(n), 2) int32 table of lower-triangle tiles, diagonal-first
+    order (diagonal tiles first so masked tiles are contiguous)."""
+    cols, rows = [], []
+    for y in range(n):
+        cols.append(y)
+        rows.append(y)
+    for y in range(n):
+        for x in range(y):
+            cols.append(x)
+            rows.append(y)
+    return np.stack([np.array(cols), np.array(rows)], 1).astype(np.int32)
+
+
+def schedule3d_table(n: int) -> np.ndarray:
+    """Exact (tet(n), 3) int32 table of T(n) tiles (zero waste, the
+    TPU-idiomatic scalar-prefetch form)."""
+    pts = []
+    for z in range(n):
+        for y in range(n - z):
+            for x in range(n - z - y):
+                pts.append((x, y, z))
+    arr = np.asarray(pts, dtype=np.int32)
+    assert len(arr) == tet(n)
+    return arr
+
+
+def folded_causal_pairs(n_tiles: int) -> np.ndarray:
+    """(n_tiles/2, 2) pairs (i, n-1-i): each pair owns i+1 + n-i = n+1 KV
+    tiles — the equal-area causal partition used for sequence-parallel
+    sharding and by the flash kernel's folded grid."""
+    assert n_tiles % 2 == 0
+    i = np.arange(n_tiles // 2, dtype=np.int32)
+    return np.stack([i, n_tiles - 1 - i], 1)
+
+
+def grid_steps(n: int, kind: str, m: int = 2) -> int:
+    """Grid steps each schedule launches — the paper's 'parallel space'.
+
+    The MAP-test speedup claim is the BB/steps ratio of these numbers.
+    """
+    if m == 2:
+        return Schedule2D(n, kind).steps if kind != "table" else tri(n)
+    if m == 3:
+        if kind == "bb":
+            return n**3
+        if kind == "octant":
+            return H.hmap3_octant_grid_size(n)
+        if kind == "table":
+            return tet(n)
+        if kind == "paper":
+            w, h, d = H.hmap3_paper_grid_shape(n)
+            return w * h * d
+    raise ValueError((n, kind, m))

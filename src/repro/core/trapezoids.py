@@ -1,0 +1,131 @@
+"""Concurrent-trapezoids extension of H to general n (paper §4.2, option 3).
+
+For non-power-of-two n, the simplex is decomposed into a small set of
+trapezoids: power-of-two triangles along the diagonal, each with the
+rectangular "box" completing its rows to the left.  The set follows the
+paper's rule — approach n from below with power-of-two pieces; the last
+piece approaches from above when the remainder drops under the threshold
+``T`` (limiting the set size; worst case log2 n pieces, typically ~2-4).
+
+Each trapezoid gets its own *exact* grid (the paper's concurrent-kernel
+launches; on TPU these become either separate ``pallas_call``s or one
+fused grid — grid steps are cheap, there is no kernel-launch cost to
+amortize, see DESIGN.md).  Geometry per trapezoid ``i``
+(offset o_i, triangle side s_i, power of two):
+
+  data rows   y in [o_i, o_i + s_i), global row y has y+1 tiles
+  tiles       = box (s_i rows x o_i cols)  +  inclusive triangle side s_i
+  grid        = (s_i/2, (s_i + 1) + 2*o_i/1)  rows:
+                  rows [0, s_i]         -> hmap2_full triangle (zero waste)
+                  rows (s_i, s_i+2*o_i] -> box fold, 2 rows of grid per
+                                           s_i/2-wide strip (zero waste)
+
+This realizes Eq. 19's B1/B2 box fold row-wise; the printed Eq. 19
+constants are figure-dependent (see DESIGN.md §2) but the mechanism —
+offset delta, fold mask k from a sign bit, grid-width translation — is
+the same.  The fold mask below is literally ``k = (h1 - wy) >> 31`` used
+as a 0/1 selector, as in the paper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import numpy as np
+
+from .hmap import hmap2_full
+
+__all__ = ["Trapezoid", "decompose", "trapezoid_map", "total_grid_cells"]
+
+
+@dataclass(frozen=True)
+class Trapezoid:
+    offset: int  # o_i: first data row / box width
+    side: int  # s_i: triangle side (power of two)
+    overshoot: int  # rows beyond n covered by the final rounded-up piece
+
+    @property
+    def grid_shape(self) -> Tuple[int, int]:
+        """(width, height): width s/2, height (s+1) + 2*offset.
+
+        A side-1 trapezoid (odd-n tail) is a single data row of
+        offset+1 tiles: grid (1, offset+1).
+        """
+        if self.side == 1:
+            return 1, self.offset + 1
+        return self.side // 2, (self.side + 1) + 2 * self.offset
+
+    @property
+    def grid_cells(self) -> int:
+        w, h = self.grid_shape
+        return w * h
+
+    @property
+    def data_tiles(self) -> int:
+        """Tiles actually inside the simplex (excludes overshoot rows)."""
+        s, o = self.side, self.offset
+        full = o * s + s * (s + 1) // 2
+        if self.overshoot:
+            # rows beyond n: the overshoot rows are the LAST ones
+            for y in range(s - self.overshoot, s):
+                full -= o + y + 1
+        return full
+
+
+def decompose(n: int, threshold: int = 4) -> List[Trapezoid]:
+    """Paper §4.2 option 3: power-of-two pieces from below; the final
+    remainder is rounded *up* to the next power of two once it is smaller
+    than ``threshold`` (its excess rows are filtered at run time)."""
+    assert n >= 1
+    pieces: List[Trapezoid] = []
+    offset = 0
+    remaining = n
+    while remaining > 0:
+        p = 1 << (remaining.bit_length() - 1)  # largest power of two <= rem
+        if remaining < threshold and (1 << remaining.bit_length()) // 2 != remaining:
+            # round the tail up: one final trapezoid with overshoot
+            p_up = 1 << remaining.bit_length()
+            pieces.append(Trapezoid(offset, p_up, p_up - remaining))
+            return pieces
+        pieces.append(Trapezoid(offset, p, 0))
+        offset += p
+        remaining -= p
+    return pieces
+
+
+def trapezoid_map(t: Trapezoid, wx, wy) -> Tuple[Any, Any, Any]:
+    """Map grid (wx, wy) of trapezoid ``t`` to global data tile (x, y).
+
+    Returns (x, y, valid).  valid=0 only on overshoot rows of a rounded-up
+    final trapezoid.  Dual-backend, branchless.
+    """
+    s, o = t.side, t.offset
+    h1 = s  # last triangle grid row index (rows 0..s are triangle)
+    if type(wx).__module__.startswith("jax") or type(wy).__module__.startswith("jax"):
+        import jax.numpy as jnp
+
+        xp = jnp
+    else:
+        xp = np
+        wx, wy = np.asarray(wx), np.asarray(wy)
+    if s == 1:  # single data row: tile (wy, offset)
+        ones = xp.ones_like(wx, dtype=bool)
+        return wy, o + xp.zeros_like(wy), ones
+    # fold mask: k = (h1 - wy) >> 31 interpreted as 0/1 (paper Eq. 19)
+    k = ((h1 - wy) >> 31) & 1
+    # triangle part (k == 0)
+    tx, ty = hmap2_full(wx, xp.minimum(wy, h1), s)
+    # box part (k == 1): linear cell l = (wy - (s+1)) * s/2 + wx over o*s box
+    l = (wy - (s + 1)) * (s // 2) + wx
+    bx = l % xp.maximum(o, 1)
+    by = l // xp.maximum(o, 1)
+    x = xp.where(k == 1, bx, o + tx)
+    y_local = xp.where(k == 1, by, ty)
+    y = o + y_local
+    valid = y_local < (s - t.overshoot)
+    return x, y, valid
+
+
+def total_grid_cells(n: int, threshold: int = 4) -> int:
+    return sum(t.grid_cells for t in decompose(n, threshold))

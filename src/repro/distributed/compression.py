@@ -1,0 +1,84 @@
+"""Gradient compression for the DCN ('pod') axis, with error feedback.
+
+At 1000+ nodes the cross-pod data-parallel reduction runs over DCN
+(25-100x slower than ICI); compressing just that hop is the standard
+lever.  Provided here:
+
+* ``compress_bf16`` — 2x: cast grads to bf16 for the cross-pod reduce,
+  accumulate the rounding error locally and add it back next step
+  (error feedback keeps convergence unbiased).
+* ``compress_int8`` — 4x: per-tensor absmax int8 quantization + error
+  feedback.
+
+Usage inside a train step (pod axis present):
+
+    comp, new_err = compress_bf16(grads, err)
+    grads = psum_over('pod', comp)        # cheap DCN hop
+    grads = psum_over(('data',), grads)   # full-precision ICI hop
+
+The dry-run's §Perf cross-pod iteration measures the wire-byte effect;
+convergence parity is asserted in tests/test_substrate_extra.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_bf16", "compress_int8", "init_error_state"]
+
+
+def init_error_state(params_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params_like
+    )
+
+
+def compress_bf16(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Returns (bf16 grads-with-feedback, new error state)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q = gf.astype(jnp.bfloat16)
+        return q, gf - q.astype(jnp.float32)
+
+    out = jax.tree_util.tree_map(one, grads, err)
+    comp = jax.tree_util.tree_map(
+        lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_err = jax.tree_util.tree_map(
+        lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return comp, new_err
+
+
+def compress_int8(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Per-tensor absmax int8; returns ((q, scale) tree, new error)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return (q, scale), gf - deq
+
+    out = jax.tree_util.tree_map(one, grads, err)
+    comp = jax.tree_util.tree_map(
+        lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_err = jax.tree_util.tree_map(
+        lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return comp, new_err
+
+
+def decompress_int8(comp: Any) -> Any:
+    def one(qs):
+        q, scale = qs
+        return q.astype(jnp.float32) * scale
+
+    return jax.tree_util.tree_map(
+        one, comp, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )

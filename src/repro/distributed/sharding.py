@@ -1,0 +1,240 @@
+"""Partition rules: parameters, optimizer state, batches, caches.
+
+Mesh axes: ('pod', 'data', 'model') multi-pod / ('data', 'model')
+single-pod.  'pod'+'data' form the FSDP/DP axes (``dp``); 'model' is the
+tensor/expert-parallel axis.
+
+Parameters follow Megatron-style col/row rules with ZeRO-3 storage: the
+non-'model' matrix dim shards over ``dp`` (GSPMD all-gathers at use).
+Optimizer state mirrors parameters (Adafactor's factored stats drop the
+reduced dim from the spec).  Caches/batches use a divisibility-driven
+generic rule so every (arch x shape) cell gets a legal spec (e.g.
+long_500k has batch 1 — nothing to shard over dp; GQA KV caches with 4-8
+heads shard sequence over 'model' instead of heads).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "dp_axes",
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs",
+    "named",
+]
+
+
+def dp_axes(mesh: Mesh, tp: bool = True) -> Tuple[str, ...]:
+    """FSDP/DP axes.  With tp=False the 'model' axis folds into FSDP."""
+    base = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return base if tp else base + ("model",)
+
+
+def _detp(spec: P, fsdp) -> P:
+    """Replace 'model' by None in a spec (tp disabled); the fsdp group
+    already includes 'model' via dp_axes(mesh, tp=False)."""
+    dims = []
+    for ax in spec:
+        if ax == "model":
+            dims.append(None)
+        elif isinstance(ax, tuple) and "model" in ax:
+            dims.append(tuple(a for a in ax if a != "model") or None)
+        else:
+            dims.append(ax)
+    return P(*dims)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------- params
+
+_COL = (  # (in, out): shard out dim over 'model', in over fsdp
+    "wq", "wk", "wv", "w1", "w3", "up", "in_proj", "w_uq", "up1", "up2",
+    "dt_proj",
+)
+_ROW = ("wo", "w2", "down", "out_proj")  # shard in dim over 'model'
+_DIN = ("w_dq", "w_dkv", "proj", "w_in")  # (d_model, small): fsdp on d only
+_REP = ("router", "w_kr", "r", "bias", "w_gn")  # replicated
+
+
+def _spec_for(path: Tuple[str, ...], leaf, fsdp, moe_ep: bool = False) -> P:
+    name = path[-1]
+    nd = leaf.ndim
+    inside_moe = "ffn" in path and nd == 3
+    if inside_moe:
+        if moe_ep:  # experts over 'model' (EP storage = EP compute layout)
+            if name in ("w1", "w3", "w2"):
+                return P("model", fsdp, None)
+        if name in ("w1", "w3"):
+            return P(None, fsdp, "model")
+        if name == "w2":
+            return P(None, "model", fsdp)
+    if name == "e":  # embedding (V, D)
+        return P("model", None)
+    if name == "unembed":
+        return P(None, "model")
+    if name in ("w_uk", "w_uv"):  # (kv_lora, H*dim): col-parallel
+        return P(None, "model")
+    if name in _REP:
+        return P(*([None] * nd))
+    if name in _DIN and nd == 2:
+        return P(fsdp, None)
+    if name in _COL and nd == 2:
+        return P(fsdp, "model")
+    if name in _ROW and nd == 2:
+        return P("model", fsdp)
+    if name == "conv_w":  # (K, d_inner)
+        return P(None, "model")
+    if name in ("conv_b", "d_skip", "dt_bias", "skip_scale") and nd == 1:
+        return P("model")
+    if name == "a_log":  # (d_inner, N)
+        return P("model", None)
+    if name in ("wi", "wf") and nd == 2:  # mlstm gates (dp, H)
+        return P("model", None)
+    # norms / scalars / small leftovers: replicated
+    return P(*([None] * nd))
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. seamless's
+    vocab 256206 is not 16-divisible -> its embedding replicates)."""
+    dims = []
+    for i, axes in enumerate(spec):
+        if axes is None:
+            dims.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = int(np.prod([mesh.shape[a] for a in ax]))
+        dims.append(axes if shape[i] % size == 0 else None)
+    return P(*dims)
+
+
+def param_specs(params, mesh: Mesh, tp: bool = True, moe_ep: bool = False):
+    """PartitionSpec tree matching ``params``; scanned stacks (leading
+    n_periods dim) get a leading None prepended automatically.  Any axis
+    that does not divide its dim falls back to replication."""
+    fsdp = dp_axes(mesh, tp)
+
+    def walk(path, leaf):
+        names = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in path
+        )
+        stacked = names and names[0] == "stack" or (
+            len(names) > 1 and names[0] == "encoder" and names[1] == "stack"
+        )
+        if stacked:
+            # leading scan dim
+            sub = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+            base = _spec_for(names, sub, fsdp, moe_ep)
+            if not tp:
+                base = _detp(base, fsdp)
+            return P(None, *_fit_spec(base, sub.shape, mesh))
+        base = _spec_for(names, leaf, fsdp, moe_ep)
+        if not tp:
+            base = _detp(base, fsdp)
+        return _fit_spec(base, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def opt_state_specs(opt_state, pspecs, params, mesh: Mesh):
+    """Mirror parameter specs onto optimizer state.
+
+    AdamW m/v have param shapes; Adafactor vr drops the last dim and vc
+    the second-to-last.  Dispatch by shape matching.
+    """
+    flatp = {
+        tuple(k.key if hasattr(k, "key") else str(k) for k in kp): (l, s)
+        for (kp, l), (_, s) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(pspecs)[0],
+        )
+    }
+
+    def walk(path, leaf):
+        names = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        if names[-1] == "gnorm":
+            return P()
+        # strip the optimizer-state prefix ('m'/'v'/'f') and suffix
+        # ('vr'/'vc'/'v') to find the underlying parameter path
+        core = names[1:]
+        suffix = None
+        if core and core[-1] in ("vr", "vc", "v"):
+            suffix = core[-1]
+            if core[:-1] in flatp:
+                core = core[:-1]
+        if core not in flatp:
+            return P(*([None] * leaf.ndim))
+        p_leaf, p_spec = flatp[core]
+        if leaf.shape == p_leaf.shape:
+            return p_spec
+        if suffix == "vr" and leaf.shape == p_leaf.shape[:-1]:
+            return P(*p_spec[:-1])
+        if suffix == "vc" and leaf.shape == p_leaf.shape[:-2] + p_leaf.shape[-1:]:
+            return P(*(tuple(p_spec[:-2]) + (p_spec[-1],)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(walk, opt_state)
+
+
+# ------------------------------------------------------------- batch / cache
+
+
+def _divisible(n: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0 and n >= size
+
+
+def batch_specs(batch, mesh: Mesh, tp: bool = True):
+    dp = dp_axes(mesh, tp)
+
+    def walk(leaf):
+        if leaf.ndim == 0:
+            return P()
+        dims: list = [None] * leaf.ndim
+        if _divisible(leaf.shape[0], mesh, dp):
+            dims[0] = dp
+        return P(*dims)
+
+    return jax.tree_util.tree_map(walk, batch)
+
+
+def cache_specs(cache, mesh: Mesh, tp: bool = True):
+    """Generic rule: batch dim over dp when divisible; then the largest
+    remaining dim divisible by |model| shards over 'model'."""
+    dp = dp_axes(mesh, tp)
+    msize = mesh.shape["model"] if tp else 1
+
+    def walk(leaf):
+        if leaf.ndim == 0:
+            return P()
+        dims: list = [None] * leaf.ndim
+        if _divisible(leaf.shape[0], mesh, dp):
+            dims[0] = dp
+        best, best_size = None, 0
+        if msize > 1:
+            for i in range(1, leaf.ndim):
+                if leaf.shape[i] % msize == 0 and leaf.shape[i] > best_size:
+                    best, best_size = i, leaf.shape[i]
+        if best is not None:
+            dims[best] = "model"
+        return P(*dims)
+
+    return jax.tree_util.tree_map(walk, cache)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels: simplex-test kernels (paper Table 1), the
+simplex-grid causal flash attention, and the MXU batched map (§7.1).
+Validated against ref.py oracles in interpret mode; ops.py holds the
+public jit'd wrappers."""
+
+from . import ops, ref

@@ -1,0 +1,192 @@
+"""Causal flash attention on the 2-simplex grid — the paper's technique
+made a first-class LM feature (DESIGN.md §2).
+
+The causal score matrix is a standard 2-simplex: tiles (q_tile, kv_tile)
+with kv <= q.  The bounding-box schedule (``kind='bb'``) lowers a full
+(nq x nk) grid and discards the upper half with ``pl.when`` — exactly the
+paper's BB baseline.  The folded schedule (``kind='folded'``) is the
+zero-waste simplex walk: grid (heads, nq/2 pairs, nq+1 steps), where pair
+``p`` serves query tiles ``p`` and ``nq-1-p``:
+
+    step j <= p:        (q, kv) = (p, j)
+    step j >  p:        (q, kv) = (nq-1-p, j-p-1)
+
+Every pair owns exactly ``nq+1`` KV tiles — constant work per grid row
+(the paper's parallel-space balance, realized as the RB fold [37], which
+the paper shows matches H for 2-simplices), and each query tile's KV
+visits are *consecutive*, which the running-softmax recurrence requires.
+Grid steps: nq(nq+1)/2 + nq/2  vs  nq^2 for BB — the asymptotic 2x of
+the paper's MAP test, with zero per-step predicates off the diagonal.
+
+The same fold is exposed as ``folded_causal_pairs`` for sequence-parallel
+sharding (equal triangle area per shard).
+
+Block sizes default to TPU-native (block_q x head_dim = 128 x 128 MXU
+tiles); tests sweep smaller shapes in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+__all__ = ["flash_attention", "flash_grid_steps"]
+
+
+def flash_grid_steps(nq_tiles: int, kind: str) -> int:
+    if kind == "bb":
+        return nq_tiles * nq_tiles
+    if kind == "folded":
+        return (nq_tiles // 2) * (nq_tiles + 1)
+    raise ValueError(kind)
+
+
+def _folded_qkv(p, j, nq):
+    """Branchless fold: step (p, j) -> (q_tile, kv_tile, is_start, is_last)."""
+    second = j > p
+    q = jnp.where(second, nq - 1 - p, p)
+    kv = jnp.where(second, j - p - 1, j)
+    start = (j == 0) | (j == p + 1)
+    last = (j == p) | (j == nq)
+    return q, kv, start, last
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kind: str = "folded",
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal self-attention, GQA-aware.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D), Hq % Hkv == 0, S % block == 0.
+    Returns (B, Hq, S, D) in q.dtype.  f32 softmax accumulation.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0 and k.shape == v.shape == (b, hkv, s, d)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0
+    assert block_q == block_kv, "fold pairs q/kv tiles 1:1 (square tiles)"
+    nq = s // block_q
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+
+    if kind == "folded" and nq == 1:
+        kind = "bb"  # single tile: nothing to fold
+    if kind == "folded":
+        assert nq % 2 == 0, "folded schedule needs an even tile count"
+        grid = (b * hq, nq // 2, nq + 1)
+
+        def q_map(bh, p, j):
+            qt, _, _, _ = _folded_qkv(p, j, nq)
+            return bh, qt, 0
+
+        def kv_map(bh, p, j):
+            _, kt, _, _ = _folded_qkv(p, j, nq)
+            return bh // g, kt, 0
+
+        def o_map(bh, p, j):
+            qt, _, _, _ = _folded_qkv(p, j, nq)
+            return bh, qt, 0
+
+    else:
+        grid = (b * hq, nq, nq)
+
+        def q_map(bh, qt, kt):
+            return bh, qt, 0
+
+        def kv_map(bh, qt, kt):
+            return bh // g, kt, 0
+
+        def o_map(bh, qt, kt):
+            return bh, qt, 0
+
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        if kind == "folded":
+            p, j = pl.program_id(1), pl.program_id(2)
+            qt, kt, start, last = _folded_qkv(p, j, nq)
+            live = jnp.bool_(True)
+        else:
+            qt, kt = pl.program_id(1), pl.program_id(2)
+            start = kt == 0
+            last = kt == qt  # causal: last useful kv tile is the diagonal
+            live = kt <= qt
+
+        @pl.when(start)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        @pl.when(live)
+        def _step():
+            qb = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+            kb = k_ref[0].astype(jnp.float32)  # (bk, d)
+            sc = jax.lax.dot_general(
+                qb, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )  # (bq, bk)
+            on_diag = qt == kt
+            rq = qt * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0
+            )
+            ck = kt * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1
+            )
+            sc = jnp.where(on_diag & (ck > rq), NEG_INF, sc)
+            m_prev = m_ref[:, :1]  # (bq, 1)
+            m_cur = jnp.max(sc, axis=1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            pr = jnp.exp(sc - m_new)  # (bq, bk)
+            l_new = l_ref[:, :1] * alpha + jnp.sum(pr, axis=1, keepdims=True)
+            acc = acc_ref[...] * alpha + jax.lax.dot_general(
+                pr,
+                v_ref[0].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+            l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+            acc_ref[...] = acc
+
+        @pl.when(last)
+        def _fin():
+            l = l_ref[:, :1]
+            l = jnp.where(l == 0.0, 1.0, l)
+            o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+    qr = q.reshape(b * hq, s, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, d)

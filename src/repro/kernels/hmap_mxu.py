@@ -1,0 +1,82 @@
+"""Batched H-map coordinates on the MXU — paper §7.1 (Eq. 32) on TPU.
+
+The paper sketches computing many block coordinates per Tensor-Core MMA
+by laying the map's constants in A, per-block inputs in B, and
+thread-local offsets in C:  D = A x B + C.
+
+On TPU the analogue unit is the MXU (128x128 systolic array).  The
+H map (Eq. 16) is affine in (wx, wy, q*b):
+
+    x = rho * (wx + 1*qb),   y = rho * (wy + 2*qb)
+
+so with  A = rho * [[1, 0, 1], [0, 1, 2]]  (padded to an (8, 8) tile) and
+B = [wx; wy; qb] for 128 blocks per step (padded to (8, 128)), one MXU
+pass emits 128 block origins in element space; C adds the intra-block
+(thread-local) offsets.  q*b itself is one shift-free integer multiply
+after the bit-smear for b — scalar-unit work, exactly as on the GPU.
+
+This kernel exists to make §7.1 concrete in TPU tile shapes; the
+practical schedules use the index_map forms (the MXU variant is useful
+when coordinates must be *materialized*, e.g. for gather/scatter lists).
+All arithmetic is exact in f32 for coordinates < 2^24.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.hmap import pow2_floor
+
+__all__ = ["hmap2_coords_mxu"]
+
+
+def hmap2_coords_mxu(
+    wxy: jax.Array, rho: int = 1, interpret: bool = True
+) -> jax.Array:
+    """(T, 2) int32 grid coords -> (T, 2) int32 data-space element origins.
+
+    Implements D = A x B + C (Eq. 32) with one (8,8)x(8,128) MXU matmul
+    per 128 blocks.  C carries the intra-block offset of thread (0, 0)
+    (zero here; real kernels add the full lane pattern).
+    """
+    t = wxy.shape[0]
+    assert wxy.shape == (t, 2) and t % 128 == 0
+
+    a_host = np.zeros((8, 8), np.float32)
+    a_host[0, 0] = rho  # x <- wx
+    a_host[0, 2] = rho  # x <- qb
+    a_host[1, 1] = rho  # y <- wy
+    a_host[1, 2] = 2 * rho  # y <- 2 qb
+
+    def kernel(w_ref, a_ref, o_ref):
+        wx = w_ref[:, 0]
+        wy = w_ref[:, 1]
+        b = pow2_floor(jnp.maximum(wy, 1))
+        qb = (wx // b) * b
+        bmat = jnp.zeros((8, 128), jnp.float32)
+        bmat = bmat.at[0].set(wx.astype(jnp.float32))
+        bmat = bmat.at[1].set(wy.astype(jnp.float32))
+        bmat = bmat.at[2].set(qb.astype(jnp.float32))
+        d = jax.lax.dot_general(
+            a_ref[...],
+            bmat,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (8, 128); rows 0,1 are x,y
+        o_ref[:, 0] = d[0].astype(jnp.int32)
+        o_ref[:, 1] = d[1].astype(jnp.int32)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t, 2), jnp.int32),
+        grid=(t // 128,),
+        in_specs=[
+            pl.BlockSpec((128, 2), lambda i: (i, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((128, 2), lambda i: (i, 0)),
+        interpret=interpret,
+    )(wxy, jnp.asarray(a_host))

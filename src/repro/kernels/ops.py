@@ -1,0 +1,81 @@
+"""Public jit'd wrappers for the kernels package.
+
+These are the entry points the rest of the framework (and users) call;
+each selects a schedule (`kind`), jit-compiles, and for non-simplex
+backends falls back to the pure-jnp reference implementation so models
+run identically on hosts without Pallas support.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .hmap_mxu import hmap2_coords_mxu
+from .simplex_kernels import accum2d, accum3d, ca2d, ca3d, edm2d, map2d
+
+__all__ = [
+    "simplex_accum2d",
+    "simplex_edm2d",
+    "simplex_ca2d",
+    "simplex_accum3d",
+    "simplex_ca3d",
+    "causal_flash_attention",
+    "hmap_coords_mxu",
+    "map_table",
+]
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind"))
+def simplex_accum2d(x, rho: int = 8, kind: str = "hmap"):
+    return accum2d(x, rho=rho, kind=kind)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind"))
+def simplex_edm2d(p, rho: int = 8, kind: str = "hmap"):
+    return edm2d(p, rho=rho, kind=kind)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind"))
+def simplex_ca2d(state, rho: int = 8, kind: str = "hmap"):
+    return ca2d(state, rho=rho, kind=kind)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind"))
+def simplex_accum3d(x, rho: int = 4, kind: str = "table"):
+    return accum3d(x, rho=rho, kind=kind)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind"))
+def simplex_ca3d(state, rho: int = 4, kind: str = "table"):
+    return ca3d(state, rho=rho, kind=kind)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "block_q", "block_kv", "impl")
+)
+def causal_flash_attention(
+    q, k, v, kind: str = "folded", block_q: int = 128, block_kv: int = 128,
+    impl: str = "pallas",
+):
+    """Causal GQA attention.  impl='pallas' uses the simplex-grid kernel
+    (interpret mode off-TPU); impl='xla' is the fused-XLA reference path
+    used by the distributed dry-run (Pallas TPU kernels cannot lower on
+    the CPU backend — DESIGN.md §8)."""
+    if impl == "xla":
+        return ref.causal_attention(q, k, v)
+    return flash_attention(q, k, v, kind=kind, block_q=block_q, block_kv=block_kv)
+
+
+@functools.partial(jax.jit, static_argnames=("rho",))
+def hmap_coords_mxu(wxy, rho: int = 1):
+    return hmap2_coords_mxu(wxy, rho=rho)
+
+
+def map_table(nb: int, kind: str = "hmap"):
+    """The MAP test's output: (steps, 3) coordinate table."""
+    return map2d(nb, kind)

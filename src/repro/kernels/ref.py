@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function is the semantic ground truth the Pallas kernels are
+validated against (tests/test_kernels_*.py sweep shapes and dtypes and
+``assert_allclose`` kernel vs oracle on the simplex domain).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "tril_mask",
+    "accum2d",
+    "edm2d",
+    "ca2d_step",
+    "tetra_mask",
+    "accum3d",
+    "ca3d_step",
+    "causal_attention",
+    "map_table_2d",
+]
+
+
+def tril_mask(n: int, dtype=jnp.bool_):
+    """Inclusive lower-triangle mask {col <= row} of an n x n grid."""
+    r = jnp.arange(n)
+    return (r[None, :] <= r[:, None]).astype(dtype)
+
+
+def map_table_2d(n_blocks: int, kind: str):
+    """Oracle for the MAP test: the (x, y[, valid]) table each schedule
+    should produce, computed with the host-side core library."""
+    from repro.core.schedule import Schedule2D
+
+    return Schedule2D(n_blocks, kind).table()
+
+
+def accum2d(x: jax.Array) -> jax.Array:
+    """ACCUM test oracle: +1 on every element of the inclusive lower
+    triangle; elements above the diagonal are zeroed (out of domain)."""
+    n = x.shape[0]
+    m = tril_mask(n, x.dtype)
+    return (x + 1) * m
+
+
+def edm2d(p: jax.Array) -> jax.Array:
+    """EDM test oracle: out[i, j] = ||p_i - p_j||_2 for j <= i, else 0."""
+    d2 = jnp.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
+    d = jnp.sqrt(d2.astype(jnp.float32)).astype(p.dtype)
+    return d * tril_mask(p.shape[0], p.dtype)
+
+
+def ca2d_step(state: jax.Array) -> jax.Array:
+    """Game-of-life step on the inclusive lower triangle with periodic
+    wrap on the underlying square (paper §5.1: periodic boundaries for
+    the 2-simplex; cells outside the triangle are permanently dead)."""
+    n = state.shape[0]
+    m = tril_mask(n, state.dtype)
+    s = state * m
+    neigh = jnp.zeros_like(s)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dx == 0 and dy == 0:
+                continue
+            neigh = neigh + jnp.roll(s, (dy, dx), axis=(0, 1))
+    born = (s == 0) & (neigh == 3)
+    survive = (s == 1) & ((neigh == 2) | (neigh == 3))
+    return ((born | survive).astype(state.dtype)) * m
+
+
+def tetra_mask(n: int, dtype=jnp.bool_):
+    """T(n) = {x+y+z < n} mask of an n^3 grid, axes (z, y, x)."""
+    r = jnp.arange(n)
+    s = r[:, None, None] + r[None, :, None] + r[None, None, :]
+    return (s < n).astype(dtype)
+
+
+def accum3d(x: jax.Array) -> jax.Array:
+    n = x.shape[0]
+    m = tetra_mask(n, x.dtype)
+    return (x + 1) * m
+
+
+def ca3d_step(state: jax.Array) -> jax.Array:
+    """Game-of-life (26-neighbour, B3/S23 analogue) on T(n) with free
+    boundaries (paper §5.1: fixed dead cells outside the tetrahedron)."""
+    n = state.shape[0]
+    m = tetra_mask(n, state.dtype)
+    s = state * m
+    pad = jnp.pad(s, 1)
+    neigh = jnp.zeros_like(s)
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                if dx == dy == dz == 0:
+                    continue
+                neigh = neigh + pad[
+                    1 + dz : 1 + dz + n, 1 + dy : 1 + dy + n, 1 + dx : 1 + dx + n
+                ]
+    born = (s == 0) & (neigh == 3)
+    survive = (s == 1) & ((neigh == 2) | (neigh == 3))
+    return ((born | survive).astype(state.dtype)) * m
+
+
+def causal_attention(q, k, v, scale: float | None = None):
+    """Reference causal attention (GQA aware).
+
+    q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    Softmax in f32; output in q.dtype.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv).astype(q.dtype)

@@ -1,0 +1,504 @@
+"""Pallas TPU kernels for the paper's four tests (Table 1) on simplex domains.
+
+Every kernel exists in (at least) two schedulings:
+
+* ``kind='hmap'`` — the paper's block-space map as the ``BlockSpec``
+  index_map: the grid is the super-orthotope (zero waste for 2-simplex,
+  ~n^3/5 for the 3-simplex octant variant, exactly tet(n) blocks for the
+  table variant) and each grid step lands on a unique simplex tile.
+* ``kind='rb'``   — rectangular-box fold [37] (2-simplex only).
+* ``kind='bb'``   — bounding box: full grid + per-tile discard
+  (``pl.when``), the baseline the paper speeds up against.
+* 3-simplex adds ``kind='octant'`` (closed-form exact, ours) and
+  ``kind='table'`` (scalar-prefetch coordinate table, the TPU-idiomatic
+  exact form).
+
+TPU notes: tiles are (rho, rho) with rho a multiple of the 8x128-friendly
+sizes in production (tests use small rho under interpret=True; the grid /
+BlockSpec structure is identical).  Out-of-domain grid steps write to a
+dedicated trash tile appended to the output so no live data is clobbered
+by Pallas' end-of-step block flush.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.hmap import hmap2_full, hmap3_octant, hmap3_octant_grid_size
+from repro.core.maps_baseline import rb_map2
+from repro.core.schedule import schedule3d_table
+from repro.core.simplex import tet
+
+__all__ = [
+    "map2d",
+    "accum2d",
+    "edm2d",
+    "ca2d",
+    "accum3d",
+    "ca3d",
+    "grid_steps_2d",
+    "grid_steps_3d",
+]
+
+
+# ---------------------------------------------------------------------------
+# schedule plumbing
+# ---------------------------------------------------------------------------
+
+
+def _sched2d(kind: str, nb: int):
+    """Returns (grid, map_fn) with map_fn: (wx, wy) -> (x, y, valid).
+
+    'hmap' requires a power-of-two tile count (paper §4.1); general nb
+    is served by the concurrent-trapezoid decomposition (§4.2,
+    core/trapezoids.py — one pallas_call per piece).  For a single-call
+    kernel on non-pow2 nb we fall back to RB (exact for any even nb)
+    or BB (odd nb) and note it — the production shapes are pow2.
+    """
+    if kind == "hmap" and (nb & (nb - 1)) != 0:
+        kind = "rb" if nb % 2 == 0 else "bb"
+    if kind == "rb" and nb % 2 != 0:
+        kind = "bb"
+    if kind == "hmap":
+        def fn(wx, wy):
+            x, y = hmap2_full(wx, wy, nb)
+            return x, y, jnp.ones_like(jnp.asarray(wx), dtype=jnp.bool_)
+
+        return (nb // 2, nb + 1), fn
+    if kind == "rb":
+        def fn(wx, wy):
+            x, y = rb_map2(wx, wy, nb)
+            return x, y, jnp.ones_like(jnp.asarray(wx), dtype=jnp.bool_)
+
+        return (nb // 2, nb + 1), fn
+    if kind == "bb":
+        def fn(wx, wy):
+            return wx, wy, wx <= wy
+
+        return (nb, nb), fn
+    raise ValueError(kind)
+
+
+def grid_steps_2d(nb: int, kind: str) -> int:
+    (w, h), _ = _sched2d(kind, nb)
+    return w * h
+
+
+# ---------------------------------------------------------------------------
+# MAP — mapping stage only (paper's theoretical-speedup microbenchmark).
+# Writes the computed (x, y) of CHUNK consecutive grid blocks per step so
+# the map cannot be elided (the CUDA version uses volatile for this).
+# ---------------------------------------------------------------------------
+
+
+def map2d(nb: int, kind: str = "hmap", chunk: int = 128) -> jax.Array:
+    """Returns (steps, 3) int32: (x, y, valid) per grid step."""
+    (w, h), fn = _sched2d(kind, nb)
+    steps = w * h
+    padded = ((steps + chunk - 1) // chunk) * chunk
+
+    def kernel(o_ref):
+        i = pl.program_id(0)
+        lin = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)[:, 0]
+        lin = jnp.minimum(lin, steps - 1)
+        wy = lin // w
+        wx = lin - wy * w
+        x, y, v = fn(wx, wy)
+        o_ref[:, 0] = x.astype(jnp.int32)
+        o_ref[:, 1] = y.astype(jnp.int32)
+        o_ref[:, 2] = v.astype(jnp.int32)
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, 3), jnp.int32),
+        grid=(padded // chunk,),
+        out_specs=pl.BlockSpec((chunk, 3), lambda i: (i, 0)),
+        interpret=True,
+    )()
+    return out[:steps]
+
+
+# ---------------------------------------------------------------------------
+# ACCUM — +1 on each simplex element (memory-bound test)
+# ---------------------------------------------------------------------------
+
+
+def accum2d(x: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
+    """+1 on the inclusive lower triangle of x (n x n, rho | n).
+
+    Untouched (out-of-domain) tiles keep their input value via
+    input/output aliasing — in-place semantics like the CUDA original.
+    """
+    n = x.shape[0]
+    assert x.shape == (n, n) and n % rho == 0
+    nb = n // rho
+    (w, h), fn = _sched2d(kind, nb)
+
+    def in_map(wx, wy):
+        xx, yy, v = fn(wx, wy)
+        return yy, xx  # (row-block, col-block)
+
+    def kernel(x_ref, o_ref):
+        wx, wy = pl.program_id(0), pl.program_id(1)
+        xb, yb, valid = fn(wx, wy)
+        row0 = yb * rho
+        col0 = xb * rho
+        r = row0 + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
+        c = col0 + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
+        tri = (c <= r) & valid
+        o_ref[...] = jnp.where(tri, x_ref[...] + 1, x_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(w, h),
+        in_specs=[pl.BlockSpec((rho, rho), in_map)],
+        out_specs=pl.BlockSpec((rho, rho), in_map),
+        input_output_aliases={0: 0},
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# EDM — Euclidean distance matrix (arithmetic-heavy test)
+# ---------------------------------------------------------------------------
+
+
+def edm2d(p: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
+    """out[i, j] = ||p_i - p_j|| on the inclusive lower triangle.
+
+    p: (n, d).  Out-of-domain tiles are written 0 via a zeros-aliased
+    output (H/RB schedules never visit them; BB writes zeros there).
+    """
+    n, d = p.shape
+    assert n % rho == 0
+    nb = n // rho
+    (w, h), fn = _sched2d(kind, nb)
+
+    def rows_map(wx, wy):
+        _, yy, _ = fn(wx, wy)
+        return yy, 0
+
+    def cols_map(wx, wy):
+        xx, _, _ = fn(wx, wy)
+        return xx, 0
+
+    def out_map(wx, wy):
+        xx, yy, _ = fn(wx, wy)
+        return yy, xx
+
+    def kernel(pr_ref, pc_ref, z_ref, o_ref):
+        del z_ref  # zeros input present only for output aliasing
+        wx, wy = pl.program_id(0), pl.program_id(1)
+        xb, yb, valid = fn(wx, wy)
+        pr = pr_ref[...].astype(jnp.float32)  # (rho, d) query rows
+        pc = pc_ref[...].astype(jnp.float32)  # (rho, d) cols
+        d2 = jnp.sum((pr[:, None, :] - pc[None, :, :]) ** 2, axis=-1)
+        dist = jnp.sqrt(d2)
+        r = yb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
+        c = xb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
+        tri = (c <= r) & valid
+        o_ref[...] = jnp.where(tri, dist, 0.0).astype(o_ref.dtype)
+
+    zeros = jnp.zeros((n, n), dtype=p.dtype)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), p.dtype),
+        grid=(w, h),
+        in_specs=[
+            pl.BlockSpec((rho, d), rows_map),
+            pl.BlockSpec((rho, d), cols_map),
+            pl.BlockSpec((rho, rho), out_map),
+        ],
+        out_specs=pl.BlockSpec((rho, rho), out_map),
+        input_output_aliases={2: 0},
+        interpret=True,
+    )(p, p, zeros)
+
+
+# ---------------------------------------------------------------------------
+# CA2D — game of life on the triangle, periodic wrap (memory-bound, halos)
+# ---------------------------------------------------------------------------
+
+
+def ca2d(state: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
+    """One GoL step on the inclusive lower triangle (periodic underlying
+    square).  Nine shifted input refs provide the halo — the standard
+    Pallas stencil pattern (no element-offset reads on TPU)."""
+    n = state.shape[0]
+    assert state.shape == (n, n) and n % rho == 0
+    nb = n // rho
+    (w, h), fn = _sched2d(kind, nb)
+
+    shifts = [(dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
+
+    def make_map(dy, dx):
+        def m(wx, wy):
+            xx, yy, _ = fn(wx, wy)
+            return (yy + dy) % nb, (xx + dx) % nb
+
+        return m
+
+    def out_map(wx, wy):
+        xx, yy, _ = fn(wx, wy)
+        return yy, xx
+
+    def kernel(*refs):
+        in_refs = refs[:9]
+        o_ref = refs[9]
+        wx, wy = pl.program_id(0), pl.program_id(1)
+        xb, yb, valid = fn(wx, wy)
+
+        def tri_of(tile_yb, tile_xb, arr):
+            r = tile_yb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
+            c = tile_xb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
+            return jnp.where(c <= r, arr, 0)
+
+        # assemble (3*rho, 3*rho) neighbourhood, each tile masked by the
+        # triangle predicate of ITS OWN (wrapped) position — matching the
+        # jnp.roll-of-masked-state reference semantics.
+        rowsl = []
+        for dy in (-1, 0, 1):
+            row = []
+            for dx in (-1, 0, 1):
+                i = shifts.index((dy, dx))
+                t = in_refs[i][...]
+                row.append(tri_of((yb + dy) % nb, (xb + dx) % nb, t))
+            rowsl.append(jnp.concatenate(row, axis=1))
+        big = jnp.concatenate(rowsl, axis=0)  # (3rho, 3rho)
+        centre = big[rho : 2 * rho, rho : 2 * rho]
+        neigh = jnp.zeros((rho, rho), dtype=big.dtype)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                if dx == 0 and dy == 0:
+                    continue
+                neigh = neigh + big[
+                    rho + dy : 2 * rho + dy, rho + dx : 2 * rho + dx
+                ]
+        born = (centre == 0) & (neigh == 3)
+        survive = (centre == 1) & ((neigh == 2) | (neigh == 3))
+        new = (born | survive).astype(o_ref.dtype)
+        r = yb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
+        c = xb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
+        tri = (c <= r) & valid
+        o_ref[...] = jnp.where(tri, new, in_refs[4][...])
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
+        grid=(w, h),
+        in_specs=[pl.BlockSpec((rho, rho), make_map(dy, dx)) for dy, dx in shifts],
+        out_specs=pl.BlockSpec((rho, rho), out_map),
+        input_output_aliases={4: 0},  # centre ref aliases the output
+        interpret=True,
+    )(*([state] * 9))
+
+
+# ---------------------------------------------------------------------------
+# 3-simplex schedules
+# ---------------------------------------------------------------------------
+
+
+def _sched3d(kind: str, nb: int):
+    """Returns (steps, map_fn, table) — map_fn: (lin, tab_ref) -> (x,y,z,valid).
+
+    ``table`` is a host numpy array passed via scalar prefetch when the
+    schedule is table-driven (the TPU-idiomatic exact form: the index map
+    reads three int32s from SMEM per grid step), else None and the map is
+    pure index arithmetic.
+    """
+    if kind == "octant":
+        steps = hmap3_octant_grid_size(nb)
+
+        def fn(lin, tab_ref=None):
+            return hmap3_octant(lin, nb)
+
+        return steps, fn, None
+    if kind == "table":
+        steps = tet(nb)
+
+        def fn(lin, tab_ref):
+            one = jnp.ones((), dtype=jnp.bool_)
+            return tab_ref[lin, 0], tab_ref[lin, 1], tab_ref[lin, 2], one
+
+        return steps, fn, schedule3d_table(nb)
+    if kind == "bb":
+        steps = nb**3
+
+        def fn(lin, tab_ref=None):
+            z = lin // (nb * nb)
+            r = lin - z * nb * nb
+            y = r // nb
+            x = r - y * nb
+            return x, y, z, (x + y + z) < nb
+
+        return steps, fn, None
+    raise ValueError(kind)
+
+
+def grid_steps_3d(nb: int, kind: str) -> int:
+    steps, _, _ = _sched3d(kind, nb)
+    return steps
+
+
+def accum3d(x: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
+    """+1 on T(n) = {x+y+z < n}; axes (z, y, x); rho | n."""
+    n = x.shape[0]
+    assert x.shape == (n, n, n) and n % rho == 0
+    nb = n // rho
+    steps, fn, table = _sched3d(kind, nb)
+
+    def in_map(i, *pref):
+        bx, by, bz, v = fn(i, *pref)
+        # invalid steps park on the trash tile (last z block of padding)
+        bz = jnp.where(v, bz, nb)
+        return bz, by, bx
+
+    def kernel(*refs):
+        if table is not None:
+            tab_ref, x_ref, o_ref = refs
+            pref = (tab_ref,)
+        else:
+            x_ref, o_ref = refs
+            pref = ()
+        i = pl.program_id(0)
+        bx, by, bz, valid = fn(i, *pref)
+        gz = bz * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 0)
+        gy = by * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 1)
+        gx = bx * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 2)
+        tet_m = ((gx + gy + gz) < n) & valid
+        o_ref[...] = jnp.where(tet_m, x_ref[...] + 1, x_ref[...])
+
+    xp = jnp.concatenate([x, jnp.zeros((rho, n, n), x.dtype)], axis=0)
+    grid_spec, args = _grid_spec_3d(
+        table, steps, [pl.BlockSpec((rho, rho, rho), in_map)],
+        pl.BlockSpec((rho, rho, rho), in_map),
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid_spec=grid_spec,
+        input_output_aliases={len(args): 0},
+        interpret=True,
+    )(*args, xp)
+    return out[:n]
+
+
+def _grid_spec_3d(table, steps, in_specs, out_specs):
+    """Plain grid or scalar-prefetch grid, matching the schedule kind."""
+    if table is None:
+        return (
+            pl.GridSpec(grid=(steps,), in_specs=in_specs, out_specs=out_specs),
+            (),
+        )
+    from jax.experimental.pallas import tpu as pltpu
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    return spec, (jnp.asarray(table),)
+
+
+def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
+    """One 26-neighbour GoL step on T(n), free boundaries.
+
+    27 shifted input refs (clamped at the domain edge; the true-coordinate
+    mask zeroes out-of-range contributions, so clamp duplicates are inert).
+    """
+    n = state.shape[0]
+    assert state.shape == (n, n, n) and n % rho == 0
+    nb = n // rho
+    steps, fn, table = _sched3d(kind, nb)
+    shifts = [
+        (dz, dy, dx) for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
+    ]
+
+    def make_map(dz, dy, dx):
+        def m(i, *pref):
+            bx, by, bz, v = fn(i, *pref)
+            bz2 = jnp.clip(bz + dz, 0, nb - 1)
+            by2 = jnp.clip(by + dy, 0, nb - 1)
+            bx2 = jnp.clip(bx + dx, 0, nb - 1)
+            return jnp.where(v, bz2, nb), by2, bx2
+
+        return m
+
+    def out_map(i, *pref):
+        bx, by, bz, v = fn(i, *pref)
+        return jnp.where(v, bz, nb), by, bx
+
+    centre_idx = shifts.index((0, 0, 0))
+
+    def kernel(*refs):
+        if table is not None:
+            pref = (refs[0],)
+            refs = refs[1:]
+        else:
+            pref = ()
+        in_refs = refs[:27]
+        o_ref = refs[27]
+        i = pl.program_id(0)
+        bx, by, bz, valid = fn(i, *pref)
+
+        big = jnp.zeros((3 * rho, 3 * rho, 3 * rho), dtype=state.dtype)
+        for si, (dz, dy, dx) in enumerate(shifts):
+            t = in_refs[si][...]
+            # mask by the TRUE coordinates of this halo tile
+            gz = (bz + dz) * rho + jax.lax.broadcasted_iota(
+                jnp.int32, (rho, rho, rho), 0
+            )
+            gy = (by + dy) * rho + jax.lax.broadcasted_iota(
+                jnp.int32, (rho, rho, rho), 1
+            )
+            gx = (bx + dx) * rho + jax.lax.broadcasted_iota(
+                jnp.int32, (rho, rho, rho), 2
+            )
+            ok = (
+                (gz >= 0) & (gz < n) & (gy >= 0) & (gy < n) & (gx >= 0) & (gx < n)
+                & ((gx + gy + gz) < n)
+            )
+            t = jnp.where(ok, t, 0)
+            big = jax.lax.dynamic_update_slice(
+                big, t, ((dz + 1) * rho, (dy + 1) * rho, (dx + 1) * rho)
+            )
+        centre = big[rho : 2 * rho, rho : 2 * rho, rho : 2 * rho]
+        neigh = jnp.zeros((rho, rho, rho), dtype=big.dtype)
+        for dz, dy, dx in shifts:
+            if dz == dy == dx == 0:
+                continue
+            neigh = neigh + jax.lax.dynamic_slice(
+                big, (rho + dz, rho + dy, rho + dx), (rho, rho, rho)
+            )
+        born = (centre == 0) & (neigh == 3)
+        survive = (centre == 1) & ((neigh == 2) | (neigh == 3))
+        new = (born | survive).astype(o_ref.dtype)
+        gz = bz * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 0)
+        gy = by * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 1)
+        gx = bx * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 2)
+        tet_m = ((gx + gy + gz) < n) & valid
+        o_ref[...] = jnp.where(tet_m, new, in_refs[centre_idx][...])
+
+    sp = jnp.concatenate([state, jnp.zeros((rho, n, n), state.dtype)], axis=0)
+    grid_spec, args = _grid_spec_3d(
+        table,
+        steps,
+        [pl.BlockSpec((rho, rho, rho), make_map(*s)) for s in shifts],
+        pl.BlockSpec((rho, rho, rho), out_map),
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(sp.shape, state.dtype),
+        grid_spec=grid_spec,
+        input_output_aliases={len(args) + centre_idx: 0},
+        interpret=True,
+    )(*args, *([sp] * 27))
+    return out[:n]

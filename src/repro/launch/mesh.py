@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (16, 16) = 256 chips,
+('data', 'model').  Multi-pod: (2, 16, 16) = 512 chips,
+('pod', 'data', 'model') — 'pod' is the DCN-spanning axis.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    assert len(devs) >= n, (
+        f"need {n} devices, found {len(devs)} — the dry-run entrypoint sets "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+        "jax import"
+    )
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh(shape, axes):
+    """Small helper for tests (e.g. (2, 2) meshes on 4 host devices)."""
+    import jax
+
+    n = int(np.prod(shape))
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

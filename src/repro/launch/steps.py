@@ -1,0 +1,216 @@
+"""Builds the jitted, sharded step functions for every (arch x shape).
+
+``train_step``  — fwd+bwd (+grad-accum microbatch scan) + optimizer
+``prefill_step``— full-sequence forward producing caches
+``serve_step``  — one decoded token against a full cache
+
+All three are what the multi-pod dry-run lowers and compiles, and what
+``launch/train.py`` / ``launch/serve.py`` execute for real on small
+configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    named,
+    opt_state_specs,
+    param_specs,
+)
+from jax.sharding import NamedSharding
+from repro.models.model import Model
+from repro.optim.optimizer import make_optimizer, warmup_cosine
+
+__all__ = ["StepBundle", "build"]
+
+
+class StepBundle:
+    """Holds the jitted step + abstract inputs + shardings for one cell."""
+
+    def __init__(self, cfg: ArchConfig, mesh, shape: ShapeCfg):
+        self.cfg = cfg
+        self.mesh = mesh
+        if getattr(cfg, "microbatches_override", 0) and shape.mode == "train":
+            import dataclasses
+            shape = dataclasses.replace(
+                shape, microbatches=cfg.microbatches_override
+            )
+        self.shape = shape
+        self.model = Model(cfg)
+        self.params_sds = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0))
+        )
+        tp = cfg.tp_size > 1
+        self.tp = tp
+        moe_ep = bool(cfg.moe) and (cfg.moe_impl or cfg.moe.impl) == "ep"
+        self.moe_ep = moe_ep
+        raw_specs = param_specs(self.params_sds, mesh, tp, moe_ep)
+        if shape.mode != "train" and cfg.weights_resident_serve:
+            from jax.sharding import PartitionSpec as _P
+
+            def _drop_fsdp(spec):
+                dims = []
+                for ax in spec:
+                    axes = (ax,) if isinstance(ax, str) else (ax or ())
+                    if any(a in ("pod", "data") for a in axes):
+                        kept = tuple(a for a in axes if a not in ("pod", "data"))
+                        dims.append(kept if len(kept) > 1 else
+                                    (kept[0] if kept else None))
+                    else:
+                        dims.append(ax)
+                return _P(*dims)
+
+            raw_specs = jax.tree_util.tree_map(
+                _drop_fsdp, raw_specs, is_leaf=lambda x: isinstance(x, _P)
+            )
+        self.pspecs = named(mesh, raw_specs)
+        if shape.mode == "train":
+            self.opt = make_optimizer(
+                cfg.optimizer, warmup_cosine(3e-4, 2000, 100_000)
+            )
+            self.opt_sds = jax.eval_shape(self.opt.init, self.params_sds)
+            raw_p = param_specs(self.params_sds, mesh, tp, moe_ep)
+            self.ospecs = named(
+                mesh,
+                opt_state_specs(self.opt_sds, raw_p, self.params_sds, mesh),
+            )
+        self.batch_sds = self.model.input_specs(shape)
+        self.bspecs = named(mesh, batch_specs(self.batch_sds, mesh, tp))
+        if shape.mode == "decode":
+            self.cache_sds = jax.eval_shape(
+                lambda: self.model.init_cache(
+                    shape.global_batch, shape.seq_len, jnp.bfloat16
+                )
+            )
+            self.cspecs = named(mesh, cache_specs(self.cache_sds, mesh, tp))
+
+    # ------------------------------------------------------------------ train
+
+    def train_step_fn(self):
+        model, mesh, nmb = self.model, self.mesh, self.shape.microbatches
+        gdt = jnp.dtype(self.cfg.gather_dtype)
+
+        def loss_fn(p, mb):
+            l, metrics = model.loss(p, mb, mesh)
+            return l, metrics
+
+        def train_step(params, opt_state, step, batch):
+            if gdt != jnp.dtype(self.cfg.param_dtype):
+                # cast while still sharded: the FSDP all-gather then moves
+                # gather_dtype bytes; grads return in gather_dtype and the
+                # optimizer applies them to the full-precision master.
+                params_c = jax.tree_util.tree_map(
+                    lambda p: p.astype(gdt) if p.ndim >= 2 else p, params
+                )
+            else:
+                params_c = params
+            if nmb > 1:
+                mbs = jax.tree_util.tree_map(
+                    lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                    batch,
+                )
+                zero = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+
+                def acc(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params_c, mb
+                    )
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                    )
+                    return (g_acc, l_acc + l), None
+
+                (grads, loss), _ = jax.lax.scan(
+                    acc, (zero, jnp.zeros((), jnp.float32)), mbs
+                )
+                grads = jax.tree_util.tree_map(lambda g: g / nmb, grads)
+                loss = loss / nmb
+            else:
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params_c, batch
+                )
+            new_p, new_o = self.opt.update(grads, opt_state, params, step)
+            return new_p, new_o, step + 1, {"loss": loss}
+
+        return train_step
+
+    def jit_train(self):
+        return jax.jit(
+            self.train_step_fn(),
+            in_shardings=(
+                self.pspecs, self.ospecs, NamedSharding(self.mesh, P()),
+                self.bspecs,
+            ),
+            out_shardings=(
+                self.pspecs, self.ospecs, NamedSharding(self.mesh, P()),
+                NamedSharding(self.mesh, P()),
+            ),
+            donate_argnums=(0, 1),
+        )
+
+    def lower_train(self):
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        with self.mesh:
+            return self.jit_train().lower(
+                self.params_sds, self.opt_sds, step_sds, self.batch_sds
+            )
+
+    # -------------------------------------------------------------- prefill
+
+    def prefill_step_fn(self):
+        model, mesh = self.model, self.mesh
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, mesh)
+
+        return prefill_step
+
+    def lower_prefill(self):
+        with self.mesh:
+            return jax.jit(
+                self.prefill_step_fn(),
+                in_shardings=(self.pspecs, self.bspecs),
+            ).lower(self.params_sds, self.batch_sds)
+
+    # ---------------------------------------------------------------- decode
+
+    def serve_step_fn(self):
+        model, mesh = self.model, self.mesh
+
+        def serve_step(params, caches, batch):
+            return model.decode(params, caches, batch, mesh)
+
+        return serve_step
+
+    def lower_serve(self):
+        with self.mesh:
+            return jax.jit(
+                self.serve_step_fn(),
+                in_shardings=(self.pspecs, self.cspecs, self.bspecs),
+            ).lower(self.params_sds, self.cache_sds, self.batch_sds)
+
+    # ------------------------------------------------------------------ main
+
+    def lower(self):
+        if self.shape.mode == "train":
+            return self.lower_train()
+        if self.shape.mode == "prefill":
+            return self.lower_prefill()
+        return self.lower_serve()
+
+
+def build(cfg: ArchConfig, mesh, shape: ShapeCfg) -> StepBundle:
+    return StepBundle(cfg, mesh, shape)

@@ -1,0 +1,3 @@
+"""LM substrate: layers, mixers (GQA/MLA/Mamba/xLSTM), MoE, stacks, Model."""
+
+from .model import Model

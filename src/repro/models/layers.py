@@ -1,0 +1,124 @@
+"""Shared model layers: norms, RoPE / M-RoPE, embeddings, SwiGLU."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "rope",
+    "mrope",
+    "swiglu_init",
+    "swiglu",
+    "embed_init",
+    "embed",
+]
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (shape[-2] is fan-in for 2D)."""
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    if scale is None:
+        scale = fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def rmsnorm_init(dim, dtype):
+    return {"w": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * p["w"].astype(dt)
+
+
+def layernorm_init(dim, dtype):
+    return {"w": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["w"].astype(dt) + p["b"].astype(dt)
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim/2), f32."""
+    half = dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, positions, theta: float = 1e6):
+    """NeoX-style rotary embedding.  x: (B, H, S, D); positions: (B, S)."""
+    d = x.shape[-1]
+    cos, sin = _rope_angles(positions, d, theta)  # (B, S, D/2)
+    cos = cos[:, None]  # (B, 1, S, D/2)
+    sin = sin[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x, positions3, sections: Tuple[int, int, int], theta: float = 1e6):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, H, S, D); positions3: (B, S, 3) for (t, h, w) streams;
+    ``sections`` split D/2 frequency slots among the three streams.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # frequency slot -> which position stream drives it
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (half,)),
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, None]
+    sin = jnp.sin(ang)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),
+        "w3": dense_init(k2, (d_model, d_ff), dtype),
+        "w2": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x):
+    dt = x.dtype
+    g = jnp.dot(x, p["w1"].astype(dt))
+    u = jnp.dot(x, p["w3"].astype(dt))
+    return jnp.dot(jax.nn.silu(g) * u, p["w2"].astype(dt))
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return {"e": dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed(p, tokens, act_dtype):
+    return jnp.take(p["e"], tokens, axis=0).astype(act_dtype)

@@ -1,0 +1,143 @@
+"""Mamba-1 selective SSM block (Jamba's sequence mixer).
+
+Training/prefill uses a parallel associative scan over time (diagonal
+A => elementwise first-order recurrence, combine (a, b): (a2*a1,
+a2*b1 + b2)); decode is the O(1) per-token recurrence carrying
+(ssm state (B, d_inner, d_state), conv tail (B, d_conv-1, d_inner)).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["mamba_init", "mamba_apply", "init_mamba_cache"]
+
+
+def _dims(cfg):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or math.ceil(cfg.d_model / 16)
+    return mc, d_inner, dt_rank
+
+
+def mamba_init(key, cfg, dtype):
+    mc, di, dtr = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(
+        jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None, :], (di, 1)
+    )
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (mc.d_conv, di), dtype, scale=mc.d_conv**-0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * mc.d_state), dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jnp.clip(
+                    jax.random.uniform(ks[4], (di,)) * (0.1 - 0.001) + 0.001,
+                    0.0001,
+                )
+            )
+            - 1.0
+        ).astype(jnp.float32),
+        "a_log": jnp.log(a),  # f32: S4D-real init
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv1d.  x: (B, S, di); w: (K, di).
+
+    With ``tail`` (B, K-1, di) the convolution is over [tail; x]
+    (decode / chunked prefill); returns (y, new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    new_tail = xp[:, -(k - 1) :]
+    return y + b.astype(x.dtype), new_tail
+
+
+def _ssm_inputs(p, cfg, x_act):
+    """x_act: (B, S, di) -> decay (B,S,di,N), u (B,S,di,N), C (B,S,N)."""
+    mc, di, dtr = _dims(cfg)
+    dt = x_act.dtype
+    proj = jnp.dot(x_act, p["x_proj"].astype(dt))
+    dt_in, bmat, cmat = jnp.split(proj, [dtr, dtr + mc.d_state], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.dot(dt_in, p["dt_proj"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B,S,di) f32
+    a = -jnp.exp(p["a_log"])  # (di, N)
+    decay = jnp.exp(delta[..., None] * a)  # (B,S,di,N)
+    u = (delta * x_act.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[
+        :, :, None, :
+    ]
+    return decay, u, cmat
+
+
+def mamba_apply(
+    p,
+    cfg,
+    x,
+    *,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    mode: str = "train",
+):
+    """x: (B, S, d).  Returns (out, new_cache)."""
+    mc, di, _ = _dims(cfg)
+    dt = x.dtype
+    xz = jnp.dot(x, p["in_proj"].astype(dt))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if mode == "decode":
+        ssm_state, conv_tail = cache  # (B,di,N) f32, (B,K-1,di)
+        xc, new_tail = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_tail)
+        x_act = jax.nn.silu(xc)
+        decay, u, cmat = _ssm_inputs(p, cfg, x_act)
+        h = decay[:, 0] * ssm_state + u[:, 0]  # (B,di,N)
+        y = (h * cmat.astype(jnp.float32)[:, 0, None, :]).sum(-1)  # (B,di)
+        y = y + p["d_skip"] * x_act.astype(jnp.float32)[:, 0]
+        out = jnp.dot(
+            (jax.nn.silu(z[:, 0]).astype(jnp.float32) * y).astype(dt)[:, None],
+            p["out_proj"].astype(dt),
+        )
+        return out, (h, new_tail)
+
+    xc, new_tail = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+    x_act = jax.nn.silu(xc)
+    decay, u, cmat = _ssm_inputs(p, cfg, x_act)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (decay, u), axis=1)
+    y = (h * cmat.astype(jnp.float32)[:, :, None, :]).sum(-1)  # (B,S,di)
+    y = y + p["d_skip"] * x_act.astype(jnp.float32)
+    out = jnp.dot(
+        (jax.nn.silu(z).astype(jnp.float32) * y).astype(dt), p["out_proj"].astype(dt)
+    )
+    new_cache = None
+    if mode == "prefill":
+        new_cache = (h[:, -1], new_tail)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    mc, di, _ = _dims(cfg)
+    return (
+        jnp.zeros((batch, di, mc.d_state), jnp.float32),
+        jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+    )

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V3), with decode absorption.
+
+Train/prefill: Q via low-rank (w_dq -> norm -> w_uq), K/V via the shared
+compressed latent c_kv (kv_lora_rank) plus a decoupled RoPE key (shared
+across heads).  Decode: the absorbed form — W_uk folds into the query and
+W_uv applies after attention over the latent — so the cache per token is
+only (kv_lora_rank + qk_rope_dim) floats regardless of head count.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_causal_attention, sharded_causal_attention
+from .layers import dense_init, rmsnorm, rmsnorm_init, rope
+
+__all__ = ["mla_init", "mla_apply", "init_mla_cache"]
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    qk_head = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, h * qk_head), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[3], (d, m.qk_rope_dim), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, h * m.qk_nope_dim), dtype),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": dense_init(ks[6], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def _project_q(p, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dt = x.dtype
+    cq = rmsnorm(p["q_norm"], jnp.dot(x, p["w_dq"].astype(dt)), cfg.norm_eps)
+    q = jnp.dot(cq, p["w_uq"].astype(dt)).reshape(
+        b, s, h, m.qk_nope_dim + m.qk_rope_dim
+    )
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_pe = rope(q_pe.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    return q_nope.transpose(0, 2, 1, 3), q_pe  # (B,H,S,*)
+
+
+def mla_apply(
+    p,
+    cfg,
+    x,
+    positions,
+    *,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    mode: str = "train",
+    mesh=None,
+):
+    """Returns (out, new_cache).  cache = (c_kv (B,S,L), k_pe (B,S,R))."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dt = x.dtype
+    q_nope, q_pe = _project_q(p, cfg, x, positions)
+
+    c_kv_new = rmsnorm(p["kv_norm"], jnp.dot(x, p["w_dkv"].astype(dt)), cfg.norm_eps)
+    k_pe_new = rope(
+        jnp.dot(x, p["w_kr"].astype(dt))[:, None], positions, cfg.rope_theta
+    )[:, 0]  # (B,S,R)
+
+    if mode != "decode":
+        # full (non-absorbed) attention: expand K and V per head
+        k_nope = jnp.dot(c_kv_new, p["w_uk"].astype(dt)).reshape(
+            b, s, h, m.qk_nope_dim
+        ).transpose(0, 2, 1, 3)
+        v = jnp.dot(c_kv_new, p["w_uv"].astype(dt)).reshape(
+            b, s, h, m.v_head_dim
+        ).transpose(0, 2, 1, 3)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe_new[:, None], (b, h, s, m.qk_rope_dim))],
+            axis=-1,
+        )
+        o = sharded_causal_attention(q, k, v, cfg, mesh)  # (B,H,S,vd)
+        out = jnp.dot(
+            o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim),
+            p["wo"].astype(dt),
+        )
+        new_cache = (c_kv_new, k_pe_new) if mode == "prefill" else None
+        return out, new_cache
+
+    # ---- absorbed decode: attend over the latent cache ----
+    c_kv, k_pe = cache  # (B,S,L), (B,S,R)
+    w_uk = p["w_uk"].astype(dt).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    # fold W_uk into q:  (B,H,1,nope) x (L,H,nope) -> (B,H,1,L)
+    q_abs = jnp.einsum("bhqn,lhn->bhql", q_nope, w_uk)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    sc = (
+        jnp.einsum("bhql,bsl->bhqs", q_abs, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bhqr,bsr->bhqs", q_pe, k_pe, preferred_element_type=jnp.float32
+        )
+    ) * scale
+    sc_new = (
+        jnp.einsum(
+            "bhql,bl->bhq", q_abs, c_kv_new[:, 0], preferred_element_type=jnp.float32
+        )
+        + jnp.einsum(
+            "bhqr,br->bhq", q_pe, k_pe_new[:, 0], preferred_element_type=jnp.float32
+        )
+    )[..., None] * scale
+    mx = jnp.maximum(sc.max(-1, keepdims=True), sc_new)
+    pc = jnp.exp(sc - mx)
+    pn = jnp.exp(sc_new - mx)
+    denom = pc.sum(-1, keepdims=True) + pn
+    ctx = (
+        jnp.einsum("bhqs,bsl->bhql", pc.astype(dt), c_kv)
+        + pn.astype(dt) * c_kv_new[:, None, 0:1]
+    ) / denom.astype(dt)
+    w_uv = p["w_uv"].astype(dt).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhql,lhv->bhqv", ctx, w_uv)  # (B,H,1,vd)
+    out = jnp.dot(
+        o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim), p["wo"].astype(dt)
+    )
+    return out, (c_kv, k_pe, c_kv_new, k_pe_new)
+
+
+def init_mla_cache(cfg, batch, seq, dtype):
+    m = cfg.mla
+    return (
+        jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+        jnp.zeros((batch, seq, m.qk_rope_dim), dtype),
+    )

@@ -1,0 +1,311 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form)
+and sLSTM (scalar memory, strictly recurrent), after arXiv:2405.04517.
+
+mLSTM is a gated linear-attention cell: state C_t = f_t C_{t-1} +
+i_t k_t v_t^T with exponential gates stabilized by a running max m_t.
+Training uses the chunkwise form: within a chunk the decay matrix
+D[t,s] = A_t - A_s + b_s (s <= t) is *lower triangular* — the same
+2-simplex iteration space the paper maps (the chunk loop walks only the
+causal chunk pairs); across chunks a sequential scan carries (C, n, m).
+Decode carries the same (C, n, m) — O(1) memory per token, which is why
+xlstm runs the long_500k cell.
+
+sLSTM keeps per-head scalar state with exponential gating and a
+normalizer; its recurrence is not parallelizable (by design — the
+paper's argument for state tracking), so training scans over time.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, layernorm, layernorm_init
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_apply",
+    "slstm_init",
+    "slstm_apply",
+    "init_mlstm_cache",
+    "init_slstm_cache",
+]
+
+
+def _mdims(cfg):
+    xc = cfg.xlstm
+    dp = int(cfg.d_model * xc.proj_factor_mlstm)
+    h = xc.n_heads
+    return xc, dp, h, dp // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype):
+    xc, dp, h, dh = _mdims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * dp), dtype),
+        "conv_w": dense_init(ks[1], (xc.d_conv, dp), dtype, scale=xc.d_conv**-0.5),
+        "conv_b": jnp.zeros((dp,), dtype),
+        "wq": dense_init(ks[2], (dp, dp), dtype),
+        "wk": dense_init(ks[3], (dp, dp), dtype),
+        "wv": dense_init(ks[4], (dp, dp), dtype),
+        "wi": dense_init(ks[5], (dp, h), jnp.float32, scale=0.02),
+        "wf": dense_init(ks[6], (dp, h), jnp.float32, scale=0.02),
+        "down": dense_init(ks[7], (dp, d), dtype),
+        "skip_scale": jnp.ones((dp,), dtype),
+    }
+
+
+def _mlstm_qkvgates(p, cfg, x_in, conv_tail=None):
+    xc, dp, h, dh = _mdims(cfg)
+    from .mamba import _causal_conv
+
+    xc_out, new_tail = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_tail)
+    x_conv = jax.nn.silu(xc_out)
+    dt = x_in.dtype
+    b, s, _ = x_in.shape
+
+    def heads(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+
+    q = heads(jnp.dot(x_conv, p["wq"].astype(dt)))
+    k = heads(jnp.dot(x_conv, p["wk"].astype(dt))) * (dh**-0.5)
+    v = heads(jnp.dot(x_in, p["wv"].astype(dt)))
+    ig = jnp.einsum("bsd,dh->bhs", x_conv.astype(jnp.float32), p["wi"])
+    fg = jnp.einsum("bsd,dh->bhs", x_conv.astype(jnp.float32), p["wf"])
+    return q, k, v, ig, fg, x_conv, new_tail
+
+
+def _mlstm_step(c, n, m, q, k, v, ig, fg):
+    """Single recurrent step.  c: (B,H,dh,dh), n: (B,H,dh), m: (B,H);
+    q,k,v: (B,H,dh); ig,fg: (B,H)."""
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    f_s = jnp.exp(logf + m - m_new)[..., None]
+    i_s = jnp.exp(ig - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_new = f_s[..., None] * c + i_s[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = f_s * n + i_s * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhij,bhi->bhj", c_new, qf)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhi,bhi->bh", n_new, qf)), jnp.exp(-m_new)
+    )[..., None]
+    return c_new, n_new, m_new, num / den
+
+
+def mlstm_recurrent(p, cfg, x_in, state):
+    """Step-by-step reference/decode path.  x_in: (B, S, dp-in space)."""
+    xc, dp, h, dh = _mdims(cfg)
+    c, n, m, conv_tail = state
+    q, k, v, ig, fg, _, new_tail = _mlstm_qkvgates(p, cfg, x_in, conv_tail)
+
+    def step(carry, t):
+        c, n, m = carry
+        c, n, m, out = _mlstm_step(
+            c, n, m, q[:, :, t], k[:, :, t], v[:, :, t], ig[:, :, t], fg[:, :, t]
+        )
+        return (c, n, m), out
+
+    (c, n, m), outs = jax.lax.scan(step, (c, n, m), jnp.arange(x_in.shape[1]))
+    outs = jnp.moveaxis(outs, 0, 2)  # (B,H,S,dh)
+    return outs, (c, n, m, new_tail)
+
+
+def mlstm_chunkwise(p, cfg, x_in):
+    """Chunkwise-parallel training form.  x_in: (B, S, dp)."""
+    xc, dp, h, dh = _mdims(cfg)
+    b, s, _ = x_in.shape
+    L = min(xc.chunk, s)
+    assert s % L == 0
+    nc = s // L
+    q, k, v, ig, fg, _, _ = _mlstm_qkvgates(p, cfg, x_in)
+    # chunked views: (B,H,nc,L,*)
+    qc = q.reshape(b, h, nc, L, dh)
+    kc = k.reshape(b, h, nc, L, dh)
+    vc = v.reshape(b, h, nc, L, dh)
+    igc = ig.reshape(b, h, nc, L)
+    logf = jax.nn.log_sigmoid(fg).reshape(b, h, nc, L)
+    A = jnp.cumsum(logf, axis=-1)  # within-chunk inclusive decay
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = col <= row  # the 2-simplex of the intra-chunk interaction
+
+    def step(carry, ci):
+        c, n, m = carry  # (B,H,dh,dh) f32, (B,H,dh) f32, (B,H) f32
+        a = A[:, :, ci]  # (B,H,L)
+        bgate = igc[:, :, ci]
+        # intra-chunk log weights D[t,s] = a_t - a_s + b_s  (s<=t)
+        dmat = a[..., :, None] - a[..., None, :] + bgate[..., None, :]
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        m_intra = dmat.max(-1)  # (B,H,L)
+        m_state = m[..., None] + a  # (B,H,L)
+        m_t = jnp.maximum(m_intra, m_state)
+        w = jnp.exp(dmat - m_t[..., None])  # (B,H,L,L)
+        qf = qc[:, :, ci].astype(jnp.float32)
+        kf = kc[:, :, ci].astype(jnp.float32)
+        vf = vc[:, :, ci].astype(jnp.float32)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * w
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vf)
+        num = num + jnp.exp(m_state - m_t)[..., None] * jnp.einsum(
+            "bhij,bhti->bhtj", c, qf
+        )
+        den_intra = scores.sum(-1)
+        den_state = jnp.exp(m_state - m_t) * jnp.einsum("bhi,bhti->bht", n, qf)
+        den = jnp.maximum(jnp.abs(den_intra + den_state), jnp.exp(-m_t))
+        out = num / den[..., None]  # (B,H,L,dh)
+        # chunk-end state update
+        a_tot = a[..., -1]  # (B,H)
+        g = a_tot[..., None] - a + bgate  # decay from pos s to chunk end
+        m_next = jnp.maximum(m + a_tot, g.max(-1))
+        scale_c = jnp.exp(m + a_tot - m_next)
+        wk = jnp.exp(g - m_next[..., None])  # (B,H,L)
+        c_next = scale_c[..., None, None] * c + jnp.einsum(
+            "bhs,bhsi,bhsj->bhij", wk, kf, vf
+        )
+        n_next = scale_c[..., None] * n + jnp.einsum("bhs,bhsi->bhi", wk, kf)
+        return (c_next, n_next, m_next), out
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    (c, n, m), outs = jax.lax.scan(step, (c0, n0, m0), jnp.arange(nc))
+    outs = jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dh)
+    return outs, (c, n, m)
+
+
+def mlstm_apply(p, cfg, x, *, cache=None, mode: str = "train"):
+    """Full mLSTM block: LN -> up-proj -> conv/qkv/gates -> cell -> gated
+    down-proj with residual handled by the caller."""
+    xc, dp, h, dh = _mdims(cfg)
+    b, s, d = x.shape
+    dt = x.dtype
+    xz = jnp.dot(x, p["up"].astype(dt))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if mode == "decode":
+        outs, new_state = mlstm_recurrent(p, cfg, x_in, cache)
+    else:
+        outs, st = mlstm_chunkwise(p, cfg, x_in)
+        tail = None
+        if mode == "prefill":
+            from .mamba import _causal_conv
+
+            _, tail = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+            new_state = st + (tail,)
+        else:
+            new_state = None
+    y = outs.transpose(0, 2, 1, 3).reshape(b, s, dp).astype(dt)
+    y = y + p["skip_scale"].astype(dt) * x_in
+    out = jnp.dot(y * jax.nn.silu(z), p["down"].astype(dt))
+    return out, new_state
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    xc, dp, h, dh = _mdims(cfg)
+    return (
+        jnp.zeros((batch, h, dh, dh), jnp.float32),
+        jnp.zeros((batch, h, dh), jnp.float32),
+        jnp.full((batch, h), -1e30, jnp.float32),
+        jnp.zeros((batch, xc.d_conv - 1, dp), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _sdims(cfg):
+    xc = cfg.xlstm
+    h = xc.n_heads
+    dh = cfg.d_model // h
+    dff = int(cfg.d_model * xc.proj_factor_slstm)
+    dff = ((dff + 63) // 64) * 64  # hardware-aligned (and TP-divisible)
+    return xc, h, dh, dff
+
+
+def slstm_init(key, cfg, dtype):
+    xc, h, dh, dff = _sdims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        # input projections for (z, i, f, o), fused
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype),
+        # per-head recurrent kernels for (z, i, f, o)
+        "r": dense_init(ks[1], (4, h, dh, dh), dtype, scale=dh**-0.5),
+        "bias": jnp.zeros((4, d), jnp.float32),
+        "w_gn": jnp.ones((d,), dtype),
+        "up1": dense_init(ks[2], (d, dff), dtype),
+        "up2": dense_init(ks[3], (d, dff), dtype),
+        "down": dense_init(ks[4], (dff, d), dtype),
+    }
+
+
+def slstm_apply(p, cfg, x, *, cache=None, mode: str = "train"):
+    """sLSTM block: recurrent scalar-memory cell + gated FFN.
+
+    x: (B, S, d).  cache: (c, n, h_prev, m) each (B, d) — d = H*dh.
+    """
+    xc, h, dh, dff = _sdims(cfg)
+    b, s, d = x.shape
+    dt = x.dtype
+    zifo = jnp.dot(x, p["w_in"].astype(dt))  # (B,S,4d)
+
+    if cache is None:
+        cache = init_slstm_cache(cfg, b, dt)
+    c0, n0, h0, m0 = cache
+
+    r = p["r"].astype(dt)
+
+    def step(carry, t):
+        c, n, h_prev, m = carry  # (B,d) f32 except h_prev in dt
+        hp = h_prev.reshape(b, h, dh).astype(dt)
+        rec = jnp.einsum("bhi,ghij->gbhj", hp, r).reshape(4, b, d)
+        pre = zifo[:, t].reshape(b, 4, d).transpose(1, 0, 2).astype(jnp.float32)
+        pre = pre + rec.astype(jnp.float32) + p["bias"][:, None, :]
+        zt = jnp.tanh(pre[0])
+        it = pre[1]
+        ft = pre[2]
+        ot = jax.nn.sigmoid(pre[3])
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new.astype(dt), m_new), h_new.astype(dt)
+
+    (c, n, h_last, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), jnp.arange(s))
+    hs = jnp.moveaxis(hs, 0, 1)  # (B,S,d)
+    # headwise group norm
+    hf = hs.astype(jnp.float32).reshape(b, s, h, dh)
+    hf = (hf - hf.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        hf.var(-1, keepdims=True) + cfg.norm_eps
+    )
+    hs = (hf.reshape(b, s, d) * p["w_gn"].astype(jnp.float32)).astype(dt)
+    # gated FFN (proj factor 4/3, xLSTM paper's post-sLSTM MLP)
+    u = jnp.dot(hs, p["up1"].astype(dt))
+    g = jnp.dot(hs, p["up2"].astype(dt))
+    out = jnp.dot(jax.nn.gelu(u) * g, p["down"].astype(dt))
+    new_cache = (c, n, h_last, m) if mode in ("prefill", "decode") else None
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    return (
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), dtype),
+        jnp.full((batch, d), -1e30, jnp.float32),
+    )

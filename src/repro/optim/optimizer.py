@@ -1,0 +1,151 @@
+"""Optimizers: AdamW and Adafactor (factored second moment), pure JAX.
+
+States mirror the parameter pytree leaf-for-leaf so the sharding rules
+that place parameters also place optimizer state (ZeRO-3 via GSPMD).
+Adafactor is used for the largest assigned archs: ~6 bytes/param total
+(fp32 master + factored v + bf16 grads) keeps 671B trainable on 512
+v5e chips (see DESIGN.md §4 and EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_optimizer", "warmup_cosine", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        wu = peak * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, wu, peak * cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def make_optimizer(
+    kind: str,
+    lr: Callable[[jax.Array], jax.Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    if kind == "adamw":
+        return _adamw(lr, b1, b2, eps, weight_decay, grad_clip)
+    if kind == "adafactor":
+        return _adafactor(lr, b2, eps, weight_decay, grad_clip)
+    raise ValueError(kind)
+
+
+def _adamw(lr, b1, b2, eps, wd, clip):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+
+    def update(grads, state, params, step):
+        grads, gn = clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+        lr_t = lr(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            pf = p.astype(jnp.float32)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                pf = pf * (1 - lr_t * wd)
+            return (pf - lr_t * upd).astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "gnorm": gn}
+
+    return Optimizer(init, update)
+
+
+def _adafactor(lr, b2, eps, wd, clip):
+    """Factored second moment for >=2D leaves (row/col statistics over the
+    last two dims); no first moment — the memory-optimal configuration."""
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {
+            "f": jax.tree_util.tree_map(st, params),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+
+    def update(grads, state, params, step):
+        grads, gn = clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        beta2t = 1.0 - t**-0.8  # Adafactor's decaying beta2
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + 1e-30
+            if p.ndim >= 2:
+                vr = beta2t * s["vr"] + (1 - beta2t) * g2.mean(-1)
+                vc = beta2t * s["vc"] + (1 - beta2t) * g2.mean(-2)
+                r = vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+                vhat = r[..., None] * vc[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2t * s["v"] + (1 - beta2t) * g2
+                new_s = {"v": vhat}
+            u = gf * jax.lax.rsqrt(vhat + eps)
+            # relative update clipping (Adafactor d=1.0)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u)
+            pf = p.astype(jnp.float32)
+            if p.ndim >= 2:
+                pf = pf * (1 - lr_t * wd)
+            return (pf - lr_t * u).astype(p.dtype), new_s
+
+        flat, td = jax.tree_util.tree_flatten(params)
+        gflat = td.flatten_up_to(grads)
+        sflat = td.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+        new_p = td.unflatten([o[0] for o in outs])
+        new_f = td.unflatten([o[1] for o in outs])
+        return new_p, {"f": new_f, "gnorm": gn}
+
+    return Optimizer(init, update)

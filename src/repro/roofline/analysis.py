@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms (per-chip seconds), TPU v5e constants:
+  compute    = HLO_FLOPs / (chips * 197e12  bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9   B/s HBM)
+  collective = wire_bytes_per_chip / 50e9   B/s per ICI link
+
+Collective bytes are NOT in cost_analysis(); they are parsed from the
+compiled HLO text: for every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute we read operand & result shapes and the
+replica-group size g, then apply ring-transfer formulas for per-chip
+wire traffic:
+    all-gather      result_bytes * (g-1)/g
+    reduce-scatter  operand_bytes * (g-1)/g
+    all-reduce      operand_bytes * 2(g-1)/g
+    all-to-all      operand_bytes * (g-1)/g
+    collective-perm operand_bytes
+(cost_analysis FLOPs/bytes are *global* across the mesh; wire bytes here
+are per chip already, so the collective term divides by one link's
+bandwidth.)
+
+MODEL_FLOPS = 6 * N_active * tokens (the usual dense-training estimate;
+fwd-only modes use 2 * N_active * tokens); the ratio MODEL_FLOPS /
+HLO_FLOPs shows how much compiled compute is "useful" — remat recompute
+and schedule waste push it down.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Dict, List
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B / s / chip
+LINK_BW = 50e9  # B / s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLL_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+__all__ = ["collective_census", "roofline_terms", "load_cells", "wire_bytes"]
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUP_V2_RE.search(line)
+    if m:  # iota tile form [num_groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUP_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return max(len(first.split(",")), 1)
+    return default
+
+
+def wire_bytes(kind: str, operand: int, result: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result * (g - 1) / g
+    if kind == "reduce-scatter":
+        return operand * (g - 1) / g
+    if kind == "all-reduce":
+        return operand * 2 * (g - 1) / g
+    if kind == "all-to-all":
+        return operand * (g - 1) / g
+    if kind == "collective-permute":
+        return operand
+    return 0.0
+
+
+def collective_census(hlo_text: str) -> Dict:
+    """Parse the compiled HLO; returns per-op-kind counts/bytes and the
+    per-chip wire-byte total.  Robust to both replica_groups syntaxes."""
+    per_kind: Dict[str, Dict[str, float]] = {}
+    total_wire = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls or "=" not in ls:
+            continue
+        m = re.search(r"=\s*(\w+\[[^\]]*\][^ ]*)\s+([a-z0-9-]+)\(", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        # strip -start/-done fusion suffixes (async collectives)
+        base = kind.replace("-start", "").replace("-done", "")
+        if base not in _COLL_OPS:
+            continue
+        if kind.endswith("-done"):
+            continue  # counted at -start
+        result_b = _shape_bytes(m.group(1))
+        # operand shapes: inside the call parens
+        inner = ls[m.end(2) + 1 :]
+        operand_b = sum(
+            _shape_bytes(t) for t in re.findall(r"\w+\[[\d,]*\]", inner)
+        )
+        if operand_b == 0:
+            operand_b = result_b
+        g = _group_size(ls)
+        wb = wire_bytes(base, operand_b, result_b, g)
+        k = per_kind.setdefault(
+            base, {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+        )
+        k["count"] += 1
+        k["operand_bytes"] += operand_b
+        k["wire_bytes"] += wb
+        total_wire += wb
+    return {"per_kind": per_kind, "wire_bytes_per_chip": total_wire}
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    """rec: one dry-run cell JSON record (see launch/dryrun.py).
+
+    The memory term is a BAND: ``memory_floor_s`` is the analytic
+    minimum HBM traffic (each chip streams its model-parallel slice of
+    the weights once per pass: microbatches x 3 passes for train with
+    full remat, 1 pass for prefill/decode — the classic weights-bound
+    floor); ``memory_s`` is the loop-aware HLO-granularity upper bound
+    (CPU-backend fusion is coarser than TPU's, so real traffic sits in
+    between).  Dominance uses the conservative floor.
+    """
+    chips = rec["n_chips"]
+    t_compute = rec["flops"] / (chips * PEAK_FLOPS)
+    t_memory_hi = rec["bytes_accessed"] / (chips * HBM_BW)
+    model_size = rec.get("model_axis", 16)
+    passes = (3 * rec.get("microbatches", 1)) if rec["mode"] == "train" else 1
+    param_bytes = rec["params"] * 4.0  # f32 master storage
+    floor = passes * param_bytes / model_size / HBM_BW
+    t_coll = rec["collectives"]["wire_bytes_per_chip"] / LINK_BW
+    terms = {
+        "compute_s": t_compute,
+        "memory_floor_s": floor,
+        "collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    factor = 6 if rec["mode"] == "train" else 2
+    model_flops = factor * rec["params_active"] * rec["tokens"]
+    hlo = max(rec["flops"], 1.0)
+    bound = max(terms.values())
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    return {
+        **terms,
+        "memory_s": t_memory_hi,  # upper bound (see docstring)
+        "dominant": dom.replace("_s", "").replace("_floor", ""),
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / hlo,
+        # fraction of the compute roofline this cell achieves if the
+        # dominant (floor-based) term were the runtime — structural MFU
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+    }
+
+
+def load_cells(outdir: str, mesh: str) -> List[Dict]:
+    d = os.path.join(outdir, mesh)
+    cells = []
+    if not os.path.isdir(d):
+        return cells
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            cells.append(json.load(open(os.path.join(d, f))))
+    return cells

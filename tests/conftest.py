@@ -1,0 +1,3 @@
+"""Shared pytest config.  NOTE: device count is NOT forced here — smoke
+tests see 1 device; multi-device tests skip unless the session provides
+devices (scripts/run_tests.sh runs the sharding module with XLA_FLAGS)."""

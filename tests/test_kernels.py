@@ -1,0 +1,144 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels import simplex_kernels as K
+from repro.kernels.flash_attention import flash_attention, flash_grid_steps
+from repro.kernels.hmap_mxu import hmap2_coords_mxu
+
+
+@pytest.mark.parametrize("nb", [4, 16, 32])
+@pytest.mark.parametrize("kind", ["hmap", "rb", "bb"])
+def test_map2d_matches_schedule(nb, kind):
+    got = np.asarray(K.map2d(nb, kind))
+    want = R.map_table_2d(nb, kind)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,rho", [(32, 4), (64, 8), (64, 16)])
+@pytest.mark.parametrize("kind", ["hmap", "rb", "bb"])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_accum2d(n, rho, kind, dtype):
+    key = jax.random.PRNGKey(n + rho)
+    x = jax.random.randint(key, (n, n), 0, 100).astype(dtype)
+    got = K.accum2d(x, rho=rho, kind=kind)
+    want = R.accum2d(x)
+    m = np.asarray(R.tril_mask(n))
+    np.testing.assert_allclose(np.asarray(got)[m], np.asarray(want)[m])
+    # out-of-domain untouched (in-place semantics)
+    np.testing.assert_allclose(np.asarray(got)[~m], np.asarray(x)[~m])
+
+
+@pytest.mark.parametrize("n,d,rho", [(32, 4, 4), (64, 8, 8), (64, 16, 8)])
+@pytest.mark.parametrize("kind", ["hmap", "rb", "bb"])
+def test_edm2d(n, d, rho, kind):
+    p = jax.random.normal(jax.random.PRNGKey(d), (n, d), dtype=jnp.float32)
+    got = K.edm2d(p, rho=rho, kind=kind)
+    want = R.edm2d(p)
+    m = np.asarray(R.tril_mask(n))
+    np.testing.assert_allclose(
+        np.asarray(got)[m], np.asarray(want)[m], rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("kind", ["hmap", "rb", "bb"])
+def test_ca2d_multi_step(kind):
+    n, rho = 48, 8
+    key = jax.random.PRNGKey(7)
+    s = (jax.random.uniform(key, (n, n)) < 0.4).astype(jnp.int32)
+    s = s * R.tril_mask(n, jnp.int32)
+    ks = rs = s
+    for _ in range(4):
+        ks = K.ca2d(ks, rho=rho, kind=kind)
+        rs = R.ca2d_step(rs)
+    m = np.asarray(R.tril_mask(n))
+    assert np.array_equal(np.asarray(ks)[m], np.asarray(rs)[m])
+
+
+@pytest.mark.parametrize("kind", ["table", "octant", "bb"])
+@pytest.mark.parametrize("n,rho", [(8, 2), (16, 4)])
+def test_accum3d(kind, n, rho):
+    x = jax.random.randint(jax.random.PRNGKey(1), (n, n, n), 0, 50).astype(
+        jnp.int32
+    )
+    got = K.accum3d(x, rho=rho, kind=kind)
+    want = R.accum3d(x)
+    m = np.asarray(R.tetra_mask(n))
+    assert np.array_equal(np.asarray(got)[m], np.asarray(want)[m])
+
+
+@pytest.mark.parametrize("kind", ["table", "octant", "bb"])
+def test_ca3d(kind):
+    n, rho = 16, 4
+    key = jax.random.PRNGKey(3)
+    s = (jax.random.uniform(key, (n, n, n)) < 0.35).astype(jnp.int32)
+    s = s * R.tetra_mask(n, jnp.int32)
+    ks = rs = s
+    for _ in range(2):
+        ks = K.ca3d(ks, rho=rho, kind=kind)
+        rs = R.ca3d_step(rs)
+    m = np.asarray(R.tetra_mask(n))
+    assert np.array_equal(np.asarray(ks)[m], np.asarray(rs)[m])
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,bq",
+    [
+        (1, 2, 2, 64, 16, 16),
+        (2, 4, 2, 128, 32, 32),
+        (1, 8, 1, 64, 64, 16),
+        (1, 2, 2, 32, 16, 32),  # single tile -> bb fallback
+    ],
+)
+@pytest.mark.parametrize("kind", ["folded", "bb"])
+def test_flash_attention(b, hq, hkv, s, d, bq, kind):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype=jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype=jnp.float32)
+    got = flash_attention(q, k, v, kind=kind, block_q=bq, block_kv=bq)
+    want = R.causal_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 4, 128, 64), dtype=jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 64),
+                          dtype=jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 64),
+                          dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, kind="folded", block_q=32, block_kv=32)
+    want = R.causal_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_flash_grid_step_counts():
+    # the paper's MAP ratio: folded ~ half of bb (asymptotically)
+    assert flash_grid_steps(16, "bb") == 256
+    assert flash_grid_steps(16, "folded") == 8 * 17  # tri(16) + 8
+    assert flash_grid_steps(128, "bb") / flash_grid_steps(128, "folded") > 1.9
+
+
+def test_hmap_mxu_matches_scalar_map():
+    from repro.core.hmap import hmap2
+
+    n = 64
+    wy, wx = np.meshgrid(np.arange(1, n), np.arange(n // 2), indexing="ij")
+    wxy = np.stack([wx.ravel(), wy.ravel()], 1).astype(np.int32)
+    pad = (-len(wxy)) % 128
+    wxy_p = np.concatenate([wxy, np.ones((pad, 2), np.int32)], 0)
+    got = np.asarray(hmap2_coords_mxu(jnp.asarray(wxy_p), rho=8))[: len(wxy)]
+    ex, ey = hmap2(wxy[:, 0].astype(np.int64), wxy[:, 1].astype(np.int64))
+    want = np.stack([ex * 8, ey * 8], 1)
+    assert np.array_equal(got, want)

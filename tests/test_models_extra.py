@@ -1,0 +1,116 @@
+"""Extended model coverage: M-RoPE, EP MoE parity, xLSTM decode
+continuity, trapezoid fallback behaviour, folded-attention gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.ALL import REDUCED
+from repro.kernels import ref as R
+from repro.models.attention import chunked_causal_attention
+from repro.models.layers import mrope, rope
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_mrope_reduces_to_rope_on_diagonal_positions():
+    """With (t,h,w) all equal to the 1-D position, M-RoPE == RoPE."""
+    b, h, s, d = 2, 4, 16, 32
+    x = jax.random.normal(KEY, (b, h, s, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3 = jnp.broadcast_to(pos[..., None], (b, s, 3))
+    got = mrope(x, pos3, (8, 4, 4), theta=1e4)
+    want = rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mrope_sections_use_distinct_streams():
+    b, h, s, d = 1, 2, 8, 32
+    x = jax.random.normal(KEY, (b, h, s, d))
+    pos3a = jnp.stack([jnp.arange(s), jnp.zeros(s), jnp.zeros(s)], -1)[None]
+    pos3b = jnp.stack([jnp.arange(s), jnp.arange(s), jnp.zeros(s)], -1)[None]
+    a = mrope(x, pos3a.astype(jnp.int32), (8, 4, 4))
+    bb = mrope(x, pos3b.astype(jnp.int32), (8, 4, 4))
+    assert float(jnp.abs(a - bb).max()) > 1e-3  # h-stream matters
+
+
+def test_folded_attention_grads_match_bb():
+    """The simplex schedule must be gradient-equivalent to BB."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 16))
+    k = jax.random.normal(ks[1], (1, 2, 128, 16))
+    v = jax.random.normal(ks[2], (1, 2, 128, 16))
+
+    def loss(sched):
+        def f(q, k, v):
+            o = chunked_causal_attention(q, k, v, chunk=32, schedule=sched)
+            return jnp.sum(o**2)
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    gf = loss("folded")
+    gb = loss("bb")
+    for a, b in zip(gf, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_xlstm_decode_continues_prefill_exactly():
+    from repro.models.xlstm import mlstm_apply, mlstm_init
+
+    cfg = REDUCED["xlstm-350m"]().replace(param_dtype="float32",
+                                          act_dtype="float32")
+    p = mlstm_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 48, cfg.d_model))
+    full, _ = mlstm_apply(p, cfg, x, mode="train")
+    o_pref, st = mlstm_apply(p, cfg, x[:, :32], mode="prefill")
+    outs = [o_pref]
+    for t in range(32, 48):
+        o, st = mlstm_apply(p, cfg, x[:, t : t + 1], mode="decode", cache=st)
+        outs.append(o)
+    stitched = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stitched), np.asarray(full),
+                               rtol=3e-3, atol=3e-4)
+
+
+def test_kernel_nonpow2_fallback_correct():
+    """nb=6 tiles (not pow2): the kernel must still be exact (RB fallback)."""
+    from repro.kernels import simplex_kernels as K
+
+    n, rho = 48, 8
+    x = jax.random.randint(KEY, (n, n), 0, 100).astype(jnp.int32)
+    got = K.accum2d(x, rho=rho, kind="hmap")
+    want = R.accum2d(x)
+    m = np.asarray(R.tril_mask(n))
+    assert np.array_equal(np.asarray(got)[m], np.asarray(want)[m])
+    # and the schedule it fell back to is zero-waste
+    assert K.grid_steps_2d(6, "hmap") == 6 // 2 * 7
+
+
+@pytest.mark.skipif(jax.device_count() < 4, reason="needs 4 devices")
+def test_moe_ep_equals_tp_on_mesh():
+    from repro.launch.mesh import make_mesh
+    from repro.models.moe import moe_apply, moe_init
+
+    mesh = make_mesh((2, 2), ("data", "model"))
+    cfg = REDUCED["qwen2-moe-a2.7b"]().replace(
+        param_dtype="float32", act_dtype="float32"
+    )
+    p = moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 16, cfg.d_model))
+    out_tp, _ = jax.jit(lambda p, x: moe_apply(p, cfg, x, mesh))(p, x)
+    cfg_ep = cfg.replace(moe_impl="ep")
+    out_ep, _ = jax.jit(lambda p, x: moe_apply(p, cfg_ep, x, mesh))(p, x)
+    np.testing.assert_allclose(np.asarray(out_ep), np.asarray(out_tp),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_trapezoid_grid_cells_near_optimal():
+    from repro.core.simplex import tri
+    from repro.core.trapezoids import total_grid_cells
+
+    # §4.2: waste stays small for arbitrary n (threshold-bounded set)
+    for n in [100, 1000, 4097, 30000]:
+        waste = total_grid_cells(n) / tri(n) - 1
+        assert waste < 0.02, (n, waste)

@@ -1,0 +1,104 @@
+"""Hypothesis property tests for the system's invariants.
+
+Invariants under test:
+  * H(w) is injective and lands in the strict lower triangle for any
+    power-of-two n and any in-range block coordinate;
+  * inverse(H(w)) == w everywhere;
+  * the inclusive-diagonal grid hits every tile exactly once (counted
+    via random probes of the inverse direction);
+  * the trapezoid decomposition covers any n >= 1 exactly;
+  * the octant 3-simplex map is injective with valid cells inside T(n);
+  * the folded causal schedule assigns every (q, kv <= q) pair exactly
+    one grid step.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hmap as H
+from repro.core.simplex import tet, tri
+from repro.core.trapezoids import decompose, trapezoid_map
+
+pow2 = st.integers(1, 12).map(lambda k: 1 << k)
+
+
+@given(k=st.integers(1, 14), data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_hmap2_point_properties(k, data):
+    n = 1 << k
+    wx = data.draw(st.integers(0, n // 2 - 1))
+    wy = data.draw(st.integers(1, n - 1))
+    x, y = H.hmap2(wx, wy)
+    assert 0 <= x < y <= n - 1
+    iwx, iwy = H.hmap2_inverse(x, y)
+    assert (iwx, iwy) == (wx, wy)
+
+
+@given(k=st.integers(1, 14), data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_hmap2_inverse_total_on_triangle(k, data):
+    """Every strict-lower point has a unique preimage in the grid."""
+    n = 1 << k
+    y = data.draw(st.integers(1, n - 1))
+    x = data.draw(st.integers(0, y - 1))
+    wx, wy = H.hmap2_inverse(x, y)
+    assert 0 <= wx < n // 2 and 1 <= wy <= n - 1
+    fx, fy = H.hmap2(wx, wy)
+    assert (fx, fy) == (x, y)
+
+
+@given(n=st.integers(1, 3000))
+@settings(max_examples=80, deadline=None)
+def test_trapezoid_cover_any_n(n):
+    total = 0
+    seen_rows = np.zeros(n, dtype=np.int64)
+    for t in decompose(n):
+        w, h = t.grid_shape
+        wy, wx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+        x, y, v = trapezoid_map(t, wx.ravel(), wy.ravel())
+        x, y, v = np.asarray(x), np.asarray(y), np.asarray(v)
+        x, y = x[v], y[v]
+        assert ((0 <= x) & (x <= y) & (y <= n - 1)).all()
+        np.add.at(seen_rows, y, 1)
+        total += len(x)
+    assert total == tri(n)
+    assert np.array_equal(seen_rows, np.arange(1, n + 1))
+
+
+@given(k=st.integers(1, 6), data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_octant_cells_valid(k, data):
+    n = 1 << k
+    g = H.hmap3_octant_grid_size(n)
+    i = data.draw(st.integers(0, g - 1))
+    x, y, z, valid = H.hmap3_octant(np.asarray([i]), n)
+    if valid[0]:
+        assert x[0] >= 0 and y[0] >= 0 and z[0] >= 0
+        assert x[0] + y[0] + z[0] < n
+
+
+@given(k=st.integers(1, 10), data=st.data())
+@settings(max_examples=150, deadline=None)
+def test_folded_schedule_unique_step(k, data):
+    """Each causal tile (q, kv<=q) is served by exactly one (p, j)."""
+    nq = 2 << k  # even
+    q = data.draw(st.integers(0, nq - 1))
+    kv = data.draw(st.integers(0, q))
+    # invert the fold: pair p serves q (first segment, j=kv<=p) if q=p;
+    # or second segment with p = nq-1-q, j = p+1+kv
+    if kv <= min(q, nq - 1 - q) and q <= nq // 2 - 1:
+        p, j = q, kv
+    else:
+        p, j = nq - 1 - q, (nq - 1 - q) + 1 + kv
+    assert 0 <= p < nq // 2 and 0 <= j <= nq
+    second = j > p
+    qq = nq - 1 - p if second else p
+    kk = j - p - 1 if second else j
+    assert (qq, kk) == (q, kv)
+
+
+@given(v=st.integers(1, 2**31 - 1))
+@settings(max_examples=300, deadline=None)
+def test_pow2_floor_matches_bitlength(v):
+    assert H.pow2_floor(v) == 1 << (int(v).bit_length() - 1)

@@ -1,0 +1,149 @@
+"""Distribution: sharding rules + small-mesh lowering integration tests.
+
+Runs on 8 forced host devices (set in conftest for THIS module only via
+subprocess-free trick: these tests require the session to have >= 4
+devices; they skip when the session was initialized single-device —
+the dry-run entry point and CI script run them under XLA_FLAGS).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.ALL import ARCH_IDS, REDUCED
+from repro.configs.base import ShapeCfg
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >=4 devices (run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def _mesh():
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((2, 2), ("data", "model"))
+
+
+@needs_devices
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_lowering_compiles(arch):
+    from repro.launch.steps import build
+
+    cfg = REDUCED[arch]()
+    b = build(cfg, _mesh(), ShapeCfg("t", 64, 8, "train", microbatches=2))
+    co = b.lower_train().compile()
+    assert co.cost_analysis() is not None
+
+
+@needs_devices
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v3-671b", "jamba-v0.1-52b",
+                                  "xlstm-350m"])
+def test_serve_lowering_compiles(arch):
+    from repro.launch.steps import build
+
+    cfg = REDUCED[arch]()
+    b = build(cfg, _mesh(), ShapeCfg("d", 64, 8, "decode"))
+    b.lower_serve().compile()
+
+
+@needs_devices
+def test_sharded_train_step_runs_and_matches_single_device():
+    """Numerical equivalence: the distributed train step on a 2x2 mesh
+    computes the same loss as the single-device path."""
+    from repro.launch.steps import build
+    from repro.models.model import Model
+
+    cfg = REDUCED["yi-6b"]().replace(param_dtype="float32", act_dtype="float32")
+    shape = ShapeCfg("t", 32, 4, "train", microbatches=1)
+    mesh = _mesh()
+    bundle = build(cfg, mesh, shape)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = bundle.opt.init(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    # reference BEFORE the step: jit_train donates params/opt_state
+    ref_loss = float(model.loss(params, batch)[0])
+    step_fn = bundle.jit_train()
+    new_p, new_o, step, metrics = step_fn(
+        params, opt_state, jnp.zeros((), jnp.int32), batch
+    )
+    dist_loss = float(metrics["loss"])
+    assert np.isfinite(dist_loss)
+    np.testing.assert_allclose(dist_loss, ref_loss, rtol=2e-4)
+
+
+@needs_devices
+def test_param_specs_divisibility():
+    """Every spec produced is legal for its leaf (the seamless vocab
+    256206 case must fall back to replication, not crash)."""
+    from repro.distributed.sharding import param_specs
+    from repro.models.model import Model
+
+    mesh = _mesh()
+    for arch in ARCH_IDS:
+        cfg = REDUCED[arch]()
+        sds = jax.eval_shape(lambda: Model(cfg).init(jax.random.PRNGKey(0)))
+        specs = param_specs(sds, mesh)
+
+        def check(leaf, spec):
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                size = int(np.prod([mesh.shape[a] for a in axes]))
+                assert leaf.shape[i] % size == 0, (arch, leaf.shape, spec)
+
+        jax.tree_util.tree_map(
+            check, sds, specs, is_leaf=lambda x: isinstance(x, P)
+        )
+
+
+@needs_devices
+def test_moe_sharded_matches_local():
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg = REDUCED["qwen2-moe-a2.7b"]().replace(
+        param_dtype="float32", act_dtype="float32"
+    )
+    mesh = _mesh()
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    out_local, aux_local = moe_apply(p, cfg, x)
+    out_dist, aux_dist = jax.jit(
+        lambda p, x: moe_apply(p, cfg, x, mesh)
+    )(p, x)
+    # capacity grouping differs (global vs per-dp-shard groups) — the
+    # routing itself must agree on non-dropped tokens; compare loosely.
+    assert out_dist.shape == out_local.shape
+    assert np.isfinite(np.asarray(out_dist)).all()
+    corr = np.corrcoef(
+        np.asarray(out_dist).ravel(), np.asarray(out_local).ravel()
+    )[0, 1]
+    assert corr > 0.98
+
+
+def test_cache_specs_generic_rule():
+    from repro.distributed.sharding import cache_specs
+    from repro.models.model import Model
+
+    if jax.device_count() < 4:
+        pytest.skip("needs mesh")
+    mesh = _mesh()
+    cfg = REDUCED["jamba-v0.1-52b"]()
+    m = Model(cfg)
+    cache = jax.eval_shape(lambda: m.init_cache(1, 64, jnp.bfloat16))
+    specs = cache_specs(cache, mesh)  # batch=1: nothing sharded over dp
+
+    def check(leaf, spec):
+        assert spec[0] is None or leaf.shape[0] % 2 == 0
+
+    jax.tree_util.tree_map(
+        check, cache, specs, is_leaf=lambda x: isinstance(x, P)
+    )
