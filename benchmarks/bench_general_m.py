@@ -3,20 +3,34 @@
 For each m: the r=1/2, beta=2 extra-space fraction (Lemma 6.1's
 m!/(2^m-2) - 1), the best integer (1/r, beta) found by the Thm 6.2
 optimization, its n0 coverage onset, and the resulting parallel-space
-speedup vs bounding box (upper bound m!)."""
+speedup vs bounding box (upper bound m!).
+
+Since the unification of the scheduling layer (DESIGN.md §4), each row
+also reports the *constructed* map family (1/r, beta) = (2, m) realized
+by ``hmap_m_recursive``: its asymptotic alpha and the measured waste of
+``SimplexSchedule(m, n, 'hmap')`` at a concrete n — feasibility numbers
+vs what the shipped bijection actually achieves."""
 
 from __future__ import annotations
 
 import math
 
-from repro.core.general_m import alpha_r_half_beta_2, optimize_r_beta
+from repro.core.general_m import (
+    alpha_extra_space,
+    alpha_r_half_beta_2,
+    best_r_beta,
+    optimize_r_beta,
+)
+from repro.core.schedule import SimplexSchedule
 
 
-def run(m_max: int = 8):
+def run(m_max: int = 8, n_measure: int = 64):
     rows = []
     for m in range(2, m_max + 1):
         cands = optimize_r_beta(m, max_inv_r=10, max_beta=24, n_max=1 << 22)
         best = cands[0] if cands else None
+        c_inv_r, c_beta = best_r_beta(m, constructible=True)
+        sched = SimplexSchedule(m, n_measure, "hmap")
         rows.append({
             "m": m,
             "alpha_half_2": alpha_r_half_beta_2(m),
@@ -25,6 +39,12 @@ def run(m_max: int = 8):
             "best_alpha": best.alpha if best else None,
             "n0": best.n0 if best else None,
             "speedup_vs_bb": best.speedup if best else None,
+            "constructible_inv_r": c_inv_r,
+            "constructible_beta": c_beta,
+            "constructible_alpha": alpha_extra_space(m, c_inv_r, c_beta),
+            "measured_waste": sched.waste(),
+            "measured_n": n_measure,
+            "measured_speedup_vs_bb": n_measure**m / sched.steps,
             "speedup_upper_bound": float(math.factorial(m)),
         })
     return rows
@@ -32,11 +52,16 @@ def run(m_max: int = 8):
 
 def main():
     rows = run()
-    print("m,alpha(r=1/2,b=2),best_1/r,best_beta,best_alpha,n0,speedup,bound_m!")
+    print("m,alpha(r=1/2,b=2),best_1/r,best_beta,best_alpha,n0,speedup,"
+          "ctor_1/r,ctor_beta,ctor_alpha,measured_waste,measured_speedup,"
+          "bound_m!")
     for r in rows:
         print(f"{r['m']},{r['alpha_half_2']:.3f},{r['best_inv_r']},"
               f"{r['best_beta']},{r['best_alpha']:.3f},{r['n0']},"
-              f"{r['speedup_vs_bb']:.1f},{r['speedup_upper_bound']:.0f}")
+              f"{r['speedup_vs_bb']:.1f},{r['constructible_inv_r']},"
+              f"{r['constructible_beta']},{r['constructible_alpha']:.3f},"
+              f"{r['measured_waste']:.3f},{r['measured_speedup_vs_bb']:.1f},"
+              f"{r['speedup_upper_bound']:.0f}")
     return rows
 
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import grid_steps
+from repro.core.schedule import SimplexSchedule
 from repro.core.maps_baseline import lambda_map2_raw
 from repro.kernels import ref as R
 from repro.kernels import simplex_kernels as K
@@ -54,15 +54,16 @@ def run(n: int = 256, rho: int = 16):
         "CA2D": lambda kind: functools.partial(K.ca2d, ca, rho=rho, kind=kind),
     }
     for tname, mk in tests.items():
-        bb_steps = grid_steps(nb, "bb")
+        bb_steps = SimplexSchedule(2, nb, "bb").steps
         bb_us = _time(jax.jit(mk("bb")))
         for kind in ["hmap", "rb", "bb"]:
-            steps = grid_steps(nb, kind)
+            sched = SimplexSchedule(2, nb, kind)
             us = bb_us if kind == "bb" else _time(jax.jit(mk(kind)))
             rows.append({
-                "test": tname, "map": kind, "n": n, "rho": rho,
-                "grid_steps": steps,
-                "space_speedup_vs_bb": bb_steps / steps,
+                "test": tname, "map": kind, "m": 2, "n": n, "rho": rho,
+                "grid_steps": sched.steps,
+                "waste": sched.waste(),
+                "space_speedup_vs_bb": bb_steps / sched.steps,
                 "us_per_call": us,
                 "wall_speedup_vs_bb": bb_us / us,
             })

@@ -16,7 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import grid_steps
+from repro.core.schedule import SimplexSchedule
 from repro.kernels import ref as R
 from repro.kernels import simplex_kernels as K
 
@@ -40,34 +40,40 @@ def run(n: int = 32, rho: int = 4):
         "ACCUM3D": lambda kind: functools.partial(K.accum3d, x, rho=rho, kind=kind),
         "CA3D": lambda kind: functools.partial(K.ca3d, ca, rho=rho, kind=kind),
     }
+    def sched(nb_, kind):
+        return SimplexSchedule(3, nb_, kind)
+
     # MAP3D is the pure schedule-walk ratio (no payload):
     for kind in ["table", "octant", "bb"]:
-        steps = grid_steps(nb, kind, m=3)
+        s = sched(nb, kind)
         rows.append({
-            "test": "MAP3D", "map": kind, "grid_steps": steps,
-            "space_speedup_vs_bb": grid_steps(nb, "bb", m=3) / steps,
+            "test": "MAP3D", "map": kind, "m": 3, "n": n,
+            "grid_steps": s.steps, "waste": s.waste(),
+            "space_speedup_vs_bb": sched(nb, "bb").steps / s.steps,
             "us_per_call": float("nan"),
             "wall_speedup_vs_bb": float("nan"),
         })
     for tname, mk in tests.items():
         bb_us = _time(jax.jit(mk("bb")))
         for kind in ["table", "octant", "bb"]:
-            steps = grid_steps(nb, kind, m=3)
+            s = sched(nb, kind)
             us = bb_us if kind == "bb" else _time(jax.jit(mk(kind)))
             rows.append({
-                "test": tname, "map": kind, "grid_steps": steps,
-                "space_speedup_vs_bb": grid_steps(nb, "bb", m=3) / steps,
+                "test": tname, "map": kind, "m": 3, "n": n,
+                "grid_steps": s.steps, "waste": s.waste(),
+                "space_speedup_vs_bb": sched(nb, "bb").steps / s.steps,
                 "us_per_call": us,
                 "wall_speedup_vs_bb": bb_us / us,
             })
     # asymptotic block-space ratios at production scale (structural)
     for nb_big in [128, 512]:
         for kind in ["table", "octant"]:
+            s = sched(nb_big, kind)
             rows.append({
-                "test": f"MAP3D(nb={nb_big})", "map": kind,
-                "grid_steps": grid_steps(nb_big, kind, m=3),
-                "space_speedup_vs_bb": grid_steps(nb_big, "bb", m=3)
-                / grid_steps(nb_big, kind, m=3),
+                "test": f"MAP3D(nb={nb_big})", "map": kind, "m": 3,
+                "n": nb_big * rho,
+                "grid_steps": s.steps, "waste": s.waste(),
+                "space_speedup_vs_bb": sched(nb_big, "bb").steps / s.steps,
                 "us_per_call": float("nan"),
                 "wall_speedup_vs_bb": float("nan"),
             })

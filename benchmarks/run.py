@@ -7,14 +7,80 @@
   beyond   -> bench_attention       (folded-simplex causal attention)
 
 Prints ``name,us_per_call,derived`` CSV lines per benchmark plus the
-full per-table CSVs.  Roofline tables come from the dry-run artifacts
-(see EXPERIMENTS.md §Roofline), not from this harness.
+full per-table CSVs, and writes ``BENCH_maps.json`` — the per-(kind, m,
+n) steps/waste/wall-time artifact future PRs diff their perf trajectory
+against.  Roofline tables come from the dry-run artifacts (see
+EXPERIMENTS.md §Roofline), not from this harness.
 """
 
 from __future__ import annotations
 
+import json
 import math
+import os
 import time
+
+
+def _map_rows_md(m: int = 4, n: int = 16, rho: int = 2):
+    """General-m section of the artifact: the m>=4 schedules plus a
+    wall-clock of the accum_md kernel they drive (interpret mode)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.schedule import SimplexSchedule, registered_kinds
+    from repro.kernels import simplex_kernels as K
+
+    nb = n // rho
+    x = jax.random.randint(jax.random.PRNGKey(0), (n,) * m, 0, 50).astype(
+        jnp.int32
+    )
+    rows = []
+    bb_steps = SimplexSchedule(m, nb, "bb").steps
+    reps = 3
+    for kind in registered_kinds(m):
+        sched = SimplexSchedule(m, nb, kind)
+        f = jax.jit(lambda kind=kind: K.accum_md(x, rho=rho, kind=kind))
+        jax.block_until_ready(f())  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(f())
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({
+            "test": f"ACCUM{m}D", "map": kind, "m": m, "n": n,
+            "grid_steps": sched.steps, "waste": sched.waste(),
+            "space_speedup_vs_bb": bb_steps / sched.steps,
+            "us_per_call": us,
+        })
+    return rows
+
+
+def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
+    """Persist steps/waste/wall-time per (kind, m, n) for perf tracking."""
+    artifact = {
+        "schema": "bench-maps/v1",
+        "rows": [
+            {
+                "test": r.get("test"),
+                "map": r.get("map"),
+                "m": r.get("m"),
+                "n": r.get("n"),
+                "grid_steps": r.get("grid_steps"),
+                "waste": r.get("waste"),
+                "us_per_call": (
+                    None
+                    if r.get("us_per_call") is None
+                    or (isinstance(r.get("us_per_call"), float)
+                        and math.isnan(r["us_per_call"]))
+                    else r["us_per_call"]
+                ),
+            }
+            for r in rows
+            if "grid_steps" in r
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    return os.path.abspath(path)
 
 
 def main() -> None:
@@ -31,12 +97,20 @@ def main() -> None:
     r2 = bench_maps_2simplex.main()
     print("# ==== Fig.13: 3-simplex maps ====")
     r3 = bench_maps_3simplex.main()
+    print("# ==== beyond-paper: general-m (m=4) schedules ====")
+    rm = _map_rows_md()
+    for r in rm:
+        print(f"{r['test']},{r['map']},{r['grid_steps']},{r['waste']:.3f},"
+              f"{r['us_per_call']:.0f}")
     print("# ==== Fig.12/15: energy (modeled) ====")
     re = bench_energy.main()
     print("# ==== §6: general-m (r,beta) ====")
     rg = bench_general_m.main()
     print("# ==== beyond-paper: folded causal attention ====")
     ra = bench_attention.main()
+
+    path = write_maps_artifact(r2 + r3 + rm)
+    print(f"# wrote {path}")
 
     print("# ==== summary: name,us_per_call,derived ====")
     for r in r2:
@@ -46,6 +120,9 @@ def main() -> None:
         us = r["us_per_call"]
         print(f"fig13/{r['test']}/{r['map']},"
               f"{us if not math.isnan(us) else 0:.0f},"
+              f"space_speedup={r['space_speedup_vs_bb']:.3f}")
+    for r in rm:
+        print(f"md/{r['test']}/{r['map']},{r['us_per_call']:.0f},"
               f"space_speedup={r['space_speedup_vs_bb']:.3f}")
     for r in re:
         print(f"fig12/{r['test']}/{r['map']},0,"

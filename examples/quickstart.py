@@ -3,12 +3,14 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hmap2_full, tri
-from repro.core.schedule import Schedule2D, grid_steps
+from repro.core.schedule import SimplexSchedule, registered_kinds
 from repro.kernels import ops
 from repro.kernels import ref as R
 
@@ -32,12 +34,24 @@ def main():
 
     print()
     print("=" * 64)
-    print("2. Grid steps: H vs bounding box (the paper's MAP speedup)")
+    print("2. One scheduling API for every dimension: SimplexSchedule")
     print("=" * 64)
+    print("  SimplexSchedule(m, n, kind) -> .grid/.steps/.map/.waste()")
+    for m in (2, 3, 4):
+        print(f"  m={m} registered kinds: {registered_kinds(m)}")
     for nb in [16, 128, 1024]:
-        s_h, s_bb = grid_steps(nb, "hmap"), grid_steps(nb, "bb")
-        print(f"  n={nb:5d}:  H {s_h:>9,} steps   BB {s_bb:>9,} steps   "
-              f"ratio {s_bb/s_h:.3f}x")
+        s_h = SimplexSchedule(2, nb, "hmap").steps
+        s_bb = SimplexSchedule(2, nb, "bb").steps
+        print(f"  m=2 n={nb:5d}:  H {s_h:>9,} steps   BB {s_bb:>9,} steps   "
+              f"ratio {s_bb/s_h:.3f}x  (the paper's MAP speedup)")
+    print("  beyond the paper: the m>=4 recursive map (DESIGN.md §4)")
+    for m in (3, 4, 5):
+        sched = SimplexSchedule(m, 64, "hmap")
+        bb = SimplexSchedule(m, 64, "bb")
+        print(f"  m={m} n=64: H {sched.steps:>10,} steps "
+              f"(waste {sched.waste():+.2f})   "
+              f"BB {bb.steps:>12,}   ratio {bb.steps/sched.steps:.1f}x "
+              f"(bound m! = {math.factorial(m)}x)")
 
     print()
     print("=" * 64)
@@ -56,6 +70,12 @@ def main():
     want = R.edm2d(p)
     print("  EDM kernel (H-grid) max err:",
           float(jnp.abs((got - want) * R.tril_mask(64, jnp.float32)).max()))
+
+    x4 = jax.random.randint(key, (8, 8, 8, 8), 0, 9).astype(jnp.int32)
+    got4 = np.asarray(ops.simplex_accum_md(x4, rho=2, kind="hmap"))
+    m4 = np.indices((8,) * 4).sum(0) < 8
+    ok4 = np.array_equal(got4[m4], (np.asarray(x4) + 1)[m4])
+    print(f"  ACCUM4D kernel (m=4 recursive H-grid) matches oracle: {ok4}")
 
     print()
     print("=" * 64)

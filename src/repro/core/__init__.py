@@ -1,15 +1,25 @@
 """Core library: the paper's m-simplex block-space maps and schedules."""
 
 from . import general_m, hmap, maps_baseline, schedule, simplex, trapezoids
+from .general_m import alpha_extra_space, best_r_beta
 from .hmap import (
     hmap2,
     hmap2_full,
     hmap2_inverse,
     hmap3_octant,
     hmap3_paper,
+    hmap_m_grid_size,
+    hmap_m_recursive,
     pow2_floor,
 )
-from .schedule import Schedule2D, folded_causal_pairs, grid_steps
+from .schedule import (
+    Schedule2D,
+    SimplexSchedule,
+    folded_causal_pairs,
+    grid_steps,
+    registered_kinds,
+    resolve_kind,
+)
 from .simplex import simplex_volume, tet, tri
 
 __all__ = [
@@ -19,15 +29,22 @@ __all__ = [
     "schedule",
     "simplex",
     "trapezoids",
+    "alpha_extra_space",
+    "best_r_beta",
     "hmap2",
     "hmap2_full",
     "hmap2_inverse",
     "hmap3_octant",
     "hmap3_paper",
+    "hmap_m_grid_size",
+    "hmap_m_recursive",
     "pow2_floor",
     "Schedule2D",
+    "SimplexSchedule",
     "folded_causal_pairs",
     "grid_steps",
+    "registered_kinds",
+    "resolve_kind",
     "simplex_volume",
     "tet",
     "tri",

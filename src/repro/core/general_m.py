@@ -25,6 +25,7 @@ __all__ = [
     "potential_speedup",
     "optimize_r_beta",
     "n0_coverage",
+    "best_r_beta",
     "RBeta",
 ]
 
@@ -117,7 +118,24 @@ def optimize_r_beta(
     return out
 
 
-def best_r_beta(m: int) -> Tuple[int, int]:
+def best_r_beta(m: int, constructible: bool = False) -> Tuple[int, int]:
+    """Best (1/r, beta) for dimension m.
+
+    ``constructible=False`` — the unconstrained Thm 6.2 optimum over the
+    integer lattice (minimal asymptotic extra space, then minimal n0).
+    These are *feasibility* optima: for m >= 4 the winners (e.g.
+    (3, 57) at m=4, alpha=0) have no known explicit bijective map.
+
+    ``constructible=True`` — restrict to parameters for which an explicit
+    map is implemented: the orthant-partition family (2, m) realized by
+    ``hmap.hmap_m_recursive`` (extra space m!/(2^m - m) - 1).  For m=2
+    this coincides with the paper's optimum (2, 2) at zero waste; for
+    m=3 it is the octant map (20%).  Closing the gap between the two is
+    a ROADMAP open item.
+    """
+    if constructible:
+        assert 2**m > m, "orthant family converges for all m >= 1"
+        return 2, m
     cands = optimize_r_beta(m)
     if not cands:
         raise ValueError(f"no feasible (r, beta) for m={m}")

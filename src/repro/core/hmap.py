@@ -31,12 +31,28 @@ per-tile predicate anywhere).
 3-simplex
 ---------
 ``hmap3_paper`` implements Eq. 26 literally.  Calibration (see
-``tests/test_hmap_3simplex.py`` and DESIGN.md) shows the printed equation
-is under-determined by the text (~30% coverage under the literal reading,
-geometry lives in the paper's figures).  The production 3D scheduler is
-``hmap3_octant`` — an *exact* self-similar map (r=1/2, beta=3 octant
-recursion; same machinery, provably bijective) — plus the table-driven
-scheduler in ``core/schedule.py`` (0% waste, the TPU-idiomatic form).
+``tests/test_core_maps.py::test_hmap3_paper_literal_coverage_documented``
+and DESIGN.md §3) shows the printed equation is under-determined by the
+text (~30% coverage under the literal reading, geometry lives in the
+paper's figures).  The production 3D scheduler is ``hmap3_octant`` — an
+*exact* self-similar map (r=1/2, beta=3 octant recursion; same
+machinery, provably bijective) — plus the table-driven scheduler in
+``core/schedule.py`` (0% waste, the TPU-idiomatic form).
+
+General m-simplex (§6, constructive)
+------------------------------------
+``hmap_m_recursive`` generalizes the octant recursion to any m >= 2 via
+the orthant partition (r = 1/2, beta = m):
+
+    T^m(n) = ([0, n/2)^m ∩ T^m(n))  ⊎  ⊎_{i=1..m} (T^m(n/2) + n/2·e_i)
+
+(a point can have at most one coordinate >= n/2 since the sum is < n,
+and subtracting n/2 from that coordinate lands it in T^m(n/2)).  This is
+the first *constructed* member of the paper's Thm 6.2 family for m >= 4;
+its extra space is ``alpha_extra_space(m, 2, m) = m!/(2^m - m) - 1``
+(m=2: 0%, m=3: 20%, m=4: 100% — still m!/(1+alpha) ~ 12x less parallel
+space than the bounding box at m=4).  ``hmap3_octant`` is the m=3
+instance.
 """
 
 from __future__ import annotations
@@ -58,6 +74,8 @@ __all__ = [
     "octant_levels",
     "hmap3_octant",
     "hmap3_octant_grid_size",
+    "hmap_m_recursive",
+    "hmap_m_grid_size",
 ]
 
 
@@ -211,59 +229,70 @@ def hmap3_paper(wx, wy, wz, n: int):
 
 
 # ---------------------------------------------------------------------------
-# Exact 3-simplex map: octant recursion (r = 1/2, beta = 3), ours.
+# Exact m-simplex map: orthant recursion (r = 1/2, beta = m), ours.
 #
-#   T(n) = (cube [0,n/2)^3  ∩ T(n))  ⊎  (T(n/2)+n/2·e_x)
-#                                    ⊎  (T(n/2)+n/2·e_y)
-#                                    ⊎  (T(n/2)+n/2·e_z)
+#   T(n) = ([0,n/2)^m ∩ T(n))  ⊎  ⊎_{i=1..m} (T(n/2) + n/2·e_i)
 #
-# (exact partition — proof: a point with x >= n/2 satisfies
-#  (x-n/2)+y+z < n/2 iff x+y+z < n, and two coordinates >= n/2 would
+# (exact partition — proof: a point with x_i >= n/2 satisfies
+#  (x_i-n/2) + rest < n/2 iff sum < n, and two coordinates >= n/2 would
 #  violate sum < n; verified constructively in tests).
 #
-# Flattened: level k = 1..K-1 has 3^(k-1) cubes of side s_k = n/2^k
-# (the near-cube of a T(n/2^(k-1)) sub-tetra; cells with local sum >=
-# 2*s_k are the dead far-corner hole, a <=1/6 fraction).  The terminal
-# level K has 3^(K-1) cubes of side 2 covering their T(2) sub-tetra
-# *entirely* (4 of 8 cells valid).  Total grid ~ n^3/5 vs V = n^3/6
-# (~20% extra, vs +500% for BB).  All index arithmetic is integer ops
-# with a fixed <= 30-level unroll.
+# Flattened: level k = 1..K-1 has m^(k-1) cubes of side s_k = n/2^k
+# (the near-cube of a T(n/2^(k-1)) sub-simplex; cells with local sum >=
+# 2*s_k are the dead far-corner hole).  The terminal level K has m^(K-1)
+# cubes of side 2 covering their T(2) sub-simplex *entirely* (m+1 of 2^m
+# cells valid).  For m=3 the total grid is ~n^3/5 vs V = n^3/6 (~20%
+# extra, vs +500% for BB); asymptotically the extra space is
+# alpha_extra_space(m, 2, m) = m!/(2^m - m) - 1.  All index arithmetic
+# is integer ops with a fixed <= 30-level unroll — usable inside Pallas
+# index_maps like hmap2.
 # ---------------------------------------------------------------------------
 
 
 def octant_levels(n: int) -> int:
     """Number of levels K = log2(n); the terminal level has side-2 cubes."""
-    assert n >= 2 and (n & (n - 1)) == 0, "octant map requires power-of-two n"
+    assert n >= 2 and (n & (n - 1)) == 0, "recursive map requires power-of-two n"
     return n.bit_length() - 1
 
 
-def _octant_level_sizes(n: int):
+def _recursive_level_sizes(n: int, m: int):
     """Per-level (count, side) pairs; terminal level has side 2."""
     K = octant_levels(n)
     out = []
     for k in range(1, K):
-        out.append((3 ** (k - 1), n >> k))
-    out.append((3 ** (K - 1), 2))  # terminal: covers T(2) fully
+        out.append((m ** (k - 1), n >> k))
+    out.append((m ** (K - 1), 2))  # terminal: covers T(2) fully
     return out
 
 
-def hmap3_octant_grid_size(n: int) -> int:
-    """Total grid cells (~n^3/5)."""
-    return sum(cnt * side**3 for cnt, side in _octant_level_sizes(n))
+def _check_r_beta(m: int, inv_r: int, beta) -> int:
+    beta = m if beta is None else beta
+    if inv_r != 2 or beta != m:
+        raise NotImplementedError(
+            f"no explicit construction for (1/r, beta) = ({inv_r}, {beta}) at "
+            f"m={m}; only the orthant partition (2, {m}) has a known "
+            "bijective map (DESIGN.md §4, ROADMAP open items)"
+        )
+    return beta
 
 
-def _octant_level_prefix(n: int):
-    sizes = [cnt * side**3 for cnt, side in _octant_level_sizes(n)]
-    prefix = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
-    return sizes, prefix
+def hmap_m_grid_size(n: int, m: int, inv_r: int = 2, beta=None) -> int:
+    """Total grid cells of the recursive m-simplex map."""
+    _check_r_beta(m, inv_r, beta)
+    return sum(cnt * side**m for cnt, side in _recursive_level_sizes(n, m))
 
 
-def hmap3_octant(idx, n: int):
-    """Exact linear-grid 3-simplex map: idx in [0, grid_size) -> (x,y,z,valid).
+def hmap_m_recursive(idx, n: int, m: int, inv_r: int = 2, beta=None):
+    """Exact linear-grid m-simplex map: idx in [0, grid_size) ->
+    (x_0, ..., x_{m-1}, valid).
 
-    Bijective onto T(n) = {x+y+z < n} over the valid cells; dead cells
-    (valid=0) are the far-corner holes (<=1/6 of the grid).  Dual-backend.
+    Bijective onto T(n) = {sum(x) < n} over the valid cells; dead cells
+    (valid=0) are the far-corner holes of each level cube.  Dual-backend
+    (numpy ints/arrays or jax tracers).  Only the constructible
+    (inv_r, beta) = (2, m) orthant family is implemented; see
+    ``general_m.best_r_beta(m, constructible=True)``.
     """
+    _check_r_beta(m, inv_r, beta)
     if _is_jax(idx):
         import jax.numpy as jnp
 
@@ -273,8 +302,9 @@ def hmap3_octant(idx, n: int):
         xp = np
         idx = np.asarray(idx, dtype=np.int64)
     K = octant_levels(n)
-    level_specs = _octant_level_sizes(n)
-    _, prefix = _octant_level_prefix(n)
+    level_specs = _recursive_level_sizes(n, m)
+    sizes = [cnt * side**m for cnt, side in level_specs]
+    prefix = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
 
     # level of this cell: fixed unroll over K levels (K <= 30)
     level = xp.zeros_like(idx)
@@ -283,36 +313,55 @@ def hmap3_octant(idx, n: int):
     base = xp.zeros_like(idx)
     s = xp.zeros_like(idx)
     bound = xp.zeros_like(idx)
-    for l, (_, side) in enumerate(level_specs):
-        base = xp.where(level == l, prefix[l], base)
-        s = xp.where(level == l, side, s)
-        # standard levels: valid iff local sum < 2*side (sub-tetra bound);
-        # terminal level: the side-2 cube covers T(2), valid iff sum < 2.
-        terminal = l == K - 1
-        bound = xp.where(level == l, 2 if terminal else 2 * side, bound)
+    for lvl, (_, side) in enumerate(level_specs):
+        base = xp.where(level == lvl, prefix[lvl], base)
+        s = xp.where(level == lvl, side, s)
+        # standard levels: valid iff local sum < 2*side (sub-simplex
+        # bound); terminal level: the side-2 cube covers T(2) fully,
+        # valid iff sum < 2.
+        terminal = lvl == K - 1
+        bound = xp.where(level == lvl, 2 if terminal else 2 * side, bound)
     rem = idx - base
-    s3 = s * s * s
-    c = rem // s3
-    p = rem - c * s3
-    pz = p // (s * s)
-    py = (p - pz * s * s) // s
-    px = p - pz * s * s - py * s
-    # offset from ternary path digits of c: digit j (0-based, j < level)
-    # chooses axis for a displacement of n >> (j+1).
-    ox = xp.zeros_like(idx)
-    oy = xp.zeros_like(idx)
-    oz = xp.zeros_like(idx)
+    c = rem // (s**m)
+    p = rem - c * (s**m)
+    # local coordinates inside the level cube, x_{m-1} decoded first
+    # (slowest axis), x_0 last (fastest) — the 3D (z, y, x) order.
+    loc = []
+    q = p
+    for j in range(m):
+        stride = s ** (m - 1 - j)
+        lj = q // stride
+        q = q - lj * stride
+        loc.append(lj)
+    loc = loc[::-1]  # loc[j] = local x_j
+    # offset from base-m path digits of c: digit j (0-based, j < level)
+    # chooses the displacement axis for a step of n >> (j+1).
+    offs = [xp.zeros_like(idx) for _ in range(m)]
     cc = c
     for j in range(K - 1):
         active = j < level
-        d = cc % 3
+        d = cc % m
         step = idx.dtype.type(n >> (j + 1)) if xp is np else (n >> (j + 1))
-        ox = xp.where(active & (d == 0), ox + step, ox)
-        oy = xp.where(active & (d == 1), oy + step, oy)
-        oz = xp.where(active & (d == 2), oz + step, oz)
-        cc = xp.where(active, cc // 3, cc)
-    x = ox + px
-    y = oy + py
-    z = oz + pz
-    valid = (px + py + pz) < bound
-    return x, y, z, valid
+        for ax in range(m):
+            offs[ax] = xp.where(active & (d == ax), offs[ax] + step, offs[ax])
+        cc = xp.where(active, cc // m, cc)
+    coords = tuple(offs[j] + loc[j] for j in range(m))
+    lsum = loc[0]
+    for lj in loc[1:]:
+        lsum = lsum + lj
+    valid = lsum < bound
+    return coords + (valid,)
+
+
+def hmap3_octant_grid_size(n: int) -> int:
+    """Total grid cells of the m=3 (octant) instance (~n^3/5)."""
+    return hmap_m_grid_size(n, 3)
+
+
+def hmap3_octant(idx, n: int):
+    """Exact linear-grid 3-simplex map: idx in [0, grid_size) -> (x,y,z,valid).
+
+    The m=3 instance of ``hmap_m_recursive`` (r=1/2, beta=3 octant
+    recursion).  Kept as a named entry point for the 3D kernels/tests.
+    """
+    return hmap_m_recursive(idx, n, 3)

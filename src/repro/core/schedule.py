@@ -1,4 +1,4 @@
-"""Grid schedules: how a Pallas/TPU grid walks a simplex domain.
+"""Grid schedules: how a Pallas/TPU grid walks an m-simplex domain.
 
 This is the hardware-adaptation layer (DESIGN.md §2): on TPU the paper's
 "thread map" becomes the *grid -> data-tile schedule*, realized either as
@@ -7,27 +7,49 @@ form) or as small scalar-prefetch coordinate tables (the TPU-idiomatic
 exact form — one int32 per block, fetched by the scalar core, negligible
 next to tile compute).
 
-Schedules provided
-------------------
-* ``Schedule2D('hmap' | 'rb' | 'bb')``        — 2-simplex tile walks
-* ``schedule3d_table`` / ``'octant'`` / 'bb'  — 3-simplex tile walks
-* ``folded_causal_pairs``                     — the load-balanced causal
-  sequence-parallel partition: query-tile i pairs with n-1-i so every
-  pair owns (n+1) KV tiles — equal triangle *area* per shard.  This is
-  the paper's parallel-space-balancing argument applied to sharding.
+``SimplexSchedule(m, n, kind)`` is the one entry point (DESIGN.md §2.2):
+a registry keyed by (dimension, kind) resolves the walk, and every
+schedule exposes the same surface —
+
+    .grid    grid dimensions the kernel launches (tuple)
+    .steps   total grid steps (the paper's "parallel space")
+    .useful  simplex cells the walk must cover, V(Delta^m_n)
+    .map     (*w) -> (*coords, valid); dual-backend (numpy / jax tracers)
+    .table() host-side (steps, m+1) int32 walk table for inspection
+    .waste() steps/useful - 1, the measured extra parallel space
+
+Registered kinds
+----------------
+* m=2: ``hmap`` (zero-waste H grid), ``rb`` (RB fold [37]), ``bb``
+  (bounding box + predicate), ``table`` (scalar-prefetch exact walk).
+* m=3: ``hmap``/``octant`` (r=1/2, beta=3 recursion, ~20% waste),
+  ``table`` (0% waste), ``bb``.
+* m>=4: ``hmap`` (orthant recursion, (1/r, beta) from
+  ``general_m.best_r_beta(m, constructible=True)``), ``table``, ``bb``.
+
+``folded_causal_pairs`` — the load-balanced causal sequence-parallel
+partition: query-tile i pairs with n-1-i so every pair owns (n+1) KV
+tiles — equal triangle *area* per shard.  This is the paper's
+parallel-space-balancing argument applied to sharding.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+import warnings
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from . import hmap as H
-from .simplex import tet, tri
+from .general_m import alpha_extra_space, best_r_beta
+from .simplex import enumerate_simplex, simplex_volume, tet, tri
 
 __all__ = [
+    "SimplexSchedule",
+    "register_schedule",
+    "registered_kinds",
+    "resolve_kind",
     "Schedule2D",
     "schedule2d_table",
     "schedule3d_table",
@@ -36,70 +58,170 @@ __all__ = [
 ]
 
 
-@dataclass(frozen=True)
-class Schedule2D:
-    """A walk over the inclusive lower triangle of an n x n tile grid.
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
 
-    kind='hmap':  zero-waste (n/2, n+1) grid, paper Eq. 14-16 + our
-                  diagonal rows; tile = (col, row) with col <= row.
-    kind='rb':    zero-waste (n/2, n+1) grid, RB fold [37].  Row-major
-                  consecutive KV visits per query tile — the schedule the
-                  flash-attention kernel uses (running softmax needs
-                  consecutive visits; see kernels/flash_attention.py).
-    kind='bb':    (n, n) bounding box + validity predicate (the baseline).
+
+@dataclass(frozen=True)
+class _Spec:
+    """Resolved schedule: what a kernel needs to launch the walk."""
+
+    grid: Tuple[int, ...]
+    map_fn: Callable  # (*w[, tab_ref]) -> (*coords, valid)
+    useful: int
+    # lazy scalar-prefetch payload for table-driven walks, else None —
+    # a thunk so that reading .steps/.waste() never pays the O(V)
+    # enumeration (grid_steps on large n must stay arithmetic)
+    table_builder: Optional[Callable[[], np.ndarray]] = field(default=None)
+    # asymptotic extra-space fraction of this kind (inf-n limit), if known
+    alpha: Optional[float] = field(default=None)
+
+
+# (m | None, kind) -> builder(m, n) -> _Spec.  None entries serve any m
+# without an exact (m, kind) registration (the general-m fallbacks).
+_REGISTRY: Dict[Tuple[Optional[int], str], Callable[[int, int], _Spec]] = {}
+
+
+def register_schedule(m: Optional[int], kind: str):
+    """Register a schedule builder for (dimension, kind); ``m=None``
+    registers a dimension-generic fallback."""
+
+    def deco(builder):
+        _REGISTRY[(m, kind)] = builder
+        return builder
+
+    return deco
+
+
+def registered_kinds(m: int) -> Tuple[str, ...]:
+    """Kinds available for dimension m (exact + generic registrations)."""
+    kinds = {k for mm, k in _REGISTRY if mm == m or mm is None}
+    return tuple(sorted(kinds))
+
+
+def resolve_kind(m: int, n: int, kind: str) -> str:
+    """Kernel-facing kind resolution (the §4.1 power-of-two constraint).
+
+    'hmap' requires a power-of-two tile count; general n is served by the
+    concurrent-trapezoid decomposition (§4.2, core/trapezoids.py — one
+    pallas_call per piece).  For a single-call kernel on non-pow2 n we
+    fall back to RB (exact for any even n, m=2), the exact table walk
+    (m >= 3), or BB — the production shapes are pow2.
+    """
+    pow2 = n >= 2 and (n & (n - 1)) == 0
+    if m == 2:
+        if kind == "hmap" and not pow2:
+            kind = "rb" if n % 2 == 0 else "bb"
+        if kind == "rb" and n % 2 != 0:
+            kind = "bb"
+        return kind
+    if kind in ("hmap", "octant") and not pow2:
+        return "table"
+    return kind
+
+
+class SimplexSchedule:
+    """A grid walk over the discrete m-simplex of side n (in tile units).
+
+    The unified scheduling layer: 2-simplex, 3-simplex and general-m
+    walks behind one registry-based API (module docstring for the kind
+    table).  Kernel-side, ``.grid``/``.map`` plug straight into Pallas
+    ``grid=``/``BlockSpec.index_map``; table-driven kinds additionally
+    ship ``.prefetch`` through ``PrefetchScalarGridSpec`` and their
+    ``.map`` takes the prefetched ref as a trailing argument.
     """
 
-    n: int
-    kind: str = "hmap"
-
-    def __post_init__(self):
-        assert self.kind in ("hmap", "rb", "bb")
-        if self.kind == "hmap":
-            assert self.n >= 2 and (self.n & (self.n - 1)) == 0, (
-                "hmap needs power-of-two n (paper §4.1); use the "
-                "trapezoid decomposition (§4.2) for general n"
+    def __init__(self, m: int, n: int, kind: str = "hmap"):
+        builder = _REGISTRY.get((m, kind)) or _REGISTRY.get((None, kind))
+        if builder is None or m < 2:
+            raise ValueError(
+                f"no schedule registered for m={m}, kind={kind!r}; "
+                f"available: {registered_kinds(m) if m >= 2 else ()}"
             )
-        if self.kind == "rb":
-            assert self.n % 2 == 0 and self.n >= 2
+        self.m = m
+        self.n = n
+        self.kind = kind
+        self._spec = builder(m, n)
+        self._table_cache: Optional[np.ndarray] = None
+
+    # -- launch surface ----------------------------------------------------
 
     @property
-    def grid(self) -> Tuple[int, int]:
-        if self.kind == "bb":
-            return self.n, self.n
-        return self.n // 2, self.n + 1
+    def grid(self) -> Tuple[int, ...]:
+        return self._spec.grid
 
     @property
     def steps(self) -> int:
-        w, h = self.grid
-        return w * h
+        s = 1
+        for g in self._spec.grid:
+            s *= g
+        return s
 
     @property
     def useful(self) -> int:
-        return tri(self.n)
+        return self._spec.useful
 
-    def map(self, wx, wy):
-        """(wx, wy) -> (col, row, valid); dual-backend, branchless."""
-        if self.kind == "hmap":
-            x, y = H.hmap2_full(wx, wy, self.n)
-            valid = _ones_like(x)
-            return x, y, valid
-        if self.kind == "rb":
-            from .maps_baseline import rb_map2
+    @property
+    def needs_table(self) -> bool:
+        return self._spec.table_builder is not None
 
-            x, y = rb_map2(wx, wy, self.n)
-            valid = _ones_like(x)
-            return x, y, valid
-        x, y = wx, wy
-        return x, y, x <= y
+    @property
+    def prefetch(self) -> Optional[np.ndarray]:
+        """Scalar-prefetch payload for table-driven walks (else None).
+
+        Built lazily on first access and cached — `.steps`/`.waste()`
+        stay O(1) arithmetic even for table kinds at large n.
+        """
+        if self._spec.table_builder is None:
+            return None
+        if self._table_cache is None:
+            self._table_cache = self._spec.table_builder()
+        return self._table_cache
+
+    def map(self, *w):
+        """(*w) -> (*coords, valid).  Dual-backend; for table-driven
+        kinds the last argument is the prefetched table ref."""
+        return self._spec.map_fn(*w)
+
+    # -- accounting --------------------------------------------------------
+
+    def waste(self) -> float:
+        """Measured extra parallel space at this n: steps/useful - 1."""
+        return self.steps / self.useful - 1.0
+
+    def asymptotic_waste(self) -> Optional[float]:
+        """inf-n extra-space fraction of this kind (None if unknown)."""
+        return self._spec.alpha
+
+    # -- host-side enumeration ---------------------------------------------
 
     def table(self) -> np.ndarray:
-        """Host-side (steps, 3) int32 table of (col, row, valid)."""
-        w, h = self.grid
-        wy, wx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
-        x, y, v = self.map(wx.ravel(), wy.ravel())
-        return np.stack(
-            [np.asarray(x), np.asarray(y), np.asarray(v).astype(np.int64)], 1
-        ).astype(np.int32)
+        """(steps, m+1) int32 walk table: (*coords, valid) per grid step.
+
+        Step order matches the linearization kernels use: grid axis 0
+        fastest (for m=2 grids (w, h): wy-major, wx within).
+        """
+        if self.needs_table:
+            tab = self.prefetch
+            valid = np.ones((len(tab), 1), dtype=np.int32)
+            return np.concatenate([tab.astype(np.int32), valid], axis=1)
+        lin = np.arange(self.steps, dtype=np.int64)
+        ws = []
+        for g in self.grid:
+            ws.append(lin % g)
+            lin = lin // g
+        out = self.map(*ws)
+        coords, valid = out[:-1], out[-1]
+        cols = [np.asarray(c) for c in coords]
+        cols.append(np.asarray(valid).astype(np.int64))
+        return np.stack(cols, axis=1).astype(np.int32)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"SimplexSchedule(m={self.m}, n={self.n}, kind={self.kind!r}, "
+            f"grid={self.grid}, steps={self.steps}, useful={self.useful})"
+        )
 
 
 def _ones_like(x):
@@ -108,6 +230,182 @@ def _ones_like(x):
 
         return jnp.ones_like(x, dtype=bool)
     return np.ones_like(np.asarray(x), dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# 2-simplex builders
+# ---------------------------------------------------------------------------
+
+
+@register_schedule(2, "hmap")
+def _build2_hmap(m: int, n: int) -> _Spec:
+    assert n >= 2 and (n & (n - 1)) == 0, (
+        "hmap needs power-of-two n (paper §4.1); use the trapezoid "
+        "decomposition (§4.2) for general n"
+    )
+
+    def fn(wx, wy):
+        x, y = H.hmap2_full(wx, wy, n)
+        return x, y, _ones_like(x)
+
+    return _Spec((n // 2, n + 1), fn, tri(n), alpha=0.0)
+
+
+@register_schedule(2, "rb")
+def _build2_rb(m: int, n: int) -> _Spec:
+    assert n % 2 == 0 and n >= 2
+
+    def fn(wx, wy):
+        from .maps_baseline import rb_map2
+
+        x, y = rb_map2(wx, wy, n)
+        return x, y, _ones_like(x)
+
+    return _Spec((n // 2, n + 1), fn, tri(n), alpha=0.0)
+
+
+@register_schedule(2, "bb")
+def _build2_bb(m: int, n: int) -> _Spec:
+    def fn(wx, wy):
+        return wx, wy, wx <= wy
+
+    return _Spec((n, n), fn, tri(n), alpha=1.0)
+
+
+@register_schedule(2, "table")
+def _build2_table(m: int, n: int) -> _Spec:
+    def fn(lin, tab_ref):
+        return tab_ref[lin, 0], tab_ref[lin, 1], _one(lin)
+
+    return _Spec(
+        (tri(n),), fn, tri(n),
+        table_builder=lambda: schedule2d_table(n), alpha=0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 3-simplex builders
+# ---------------------------------------------------------------------------
+
+
+@register_schedule(3, "table")
+def _build3_table(m: int, n: int) -> _Spec:
+    def fn(lin, tab_ref):
+        return tab_ref[lin, 0], tab_ref[lin, 1], tab_ref[lin, 2], _one(lin)
+
+    return _Spec(
+        (tet(n),), fn, tet(n),
+        table_builder=lambda: schedule3d_table(n), alpha=0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# general-m builders (serve m=3 'hmap'/'octant' and every m >= 4)
+# ---------------------------------------------------------------------------
+
+
+def _build_md_hmap(m: int, n: int) -> _Spec:
+    inv_r, beta = best_r_beta(m, constructible=True)
+    steps = H.hmap_m_grid_size(n, m, inv_r, beta)
+
+    def fn(lin):
+        return H.hmap_m_recursive(lin, n, m, inv_r, beta)
+
+    return _Spec(
+        (steps,),
+        fn,
+        simplex_volume(n, m),
+        alpha=alpha_extra_space(m, inv_r, beta),
+    )
+
+
+register_schedule(None, "hmap")(_build_md_hmap)
+register_schedule(3, "octant")(_build_md_hmap)
+
+
+@register_schedule(None, "table")
+def _build_md_table(m: int, n: int) -> _Spec:
+    def fn(lin, tab_ref):
+        return tuple(tab_ref[lin, j] for j in range(m)) + (_one(lin),)
+
+    v = simplex_volume(n, m)
+    return _Spec(
+        (v,), fn, v,
+        table_builder=lambda: enumerate_simplex(n, m).astype(np.int32),
+        alpha=0.0,
+    )
+
+
+@register_schedule(None, "bb")
+def _build_md_bb(m: int, n: int) -> _Spec:
+    import math
+
+    def fn(lin):
+        coords = []
+        rem = lin
+        for _ in range(m):
+            coords.append(rem % n)
+            rem = rem // n
+        total = coords[0]
+        for c in coords[1:]:
+            total = total + c
+        return tuple(coords) + (total < n,)
+
+    return _Spec(
+        (n**m,), fn, simplex_volume(n, m), alpha=math.factorial(m) - 1.0
+    )
+
+
+def _one(lin):
+    if type(lin).__module__.startswith("jax"):
+        import jax.numpy as jnp
+
+        return jnp.ones_like(jnp.asarray(lin), dtype=jnp.bool_)
+    return np.ones_like(np.asarray(lin), dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# deprecated 2D shim + host tables
+# ---------------------------------------------------------------------------
+
+
+class Schedule2D:
+    """Deprecated thin shim over ``SimplexSchedule(2, n, kind)``.
+
+    kind='hmap':  zero-waste (n/2, n+1) grid, paper Eq. 14-16 + our
+                  diagonal rows; tile = (col, row) with col <= row.
+    kind='rb':    zero-waste (n/2, n+1) grid, RB fold [37].
+    kind='bb':    (n, n) bounding box + validity predicate (the baseline).
+    """
+
+    def __init__(self, n: int, kind: str = "hmap"):
+        warnings.warn(
+            "Schedule2D is deprecated; use SimplexSchedule(2, n, kind)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        assert kind in ("hmap", "rb", "bb")
+        self.n = n
+        self.kind = kind
+        self._s = SimplexSchedule(2, n, kind)
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self._s.grid
+
+    @property
+    def steps(self) -> int:
+        return self._s.steps
+
+    @property
+    def useful(self) -> int:
+        return self._s.useful
+
+    def map(self, wx, wy):
+        return self._s.map(wx, wy)
+
+    def table(self) -> np.ndarray:
+        return self._s.table()
 
 
 def schedule2d_table(n: int) -> np.ndarray:
@@ -151,16 +449,7 @@ def grid_steps(n: int, kind: str, m: int = 2) -> int:
 
     The MAP-test speedup claim is the BB/steps ratio of these numbers.
     """
-    if m == 2:
-        return Schedule2D(n, kind).steps if kind != "table" else tri(n)
-    if m == 3:
-        if kind == "bb":
-            return n**3
-        if kind == "octant":
-            return H.hmap3_octant_grid_size(n)
-        if kind == "table":
-            return tet(n)
-        if kind == "paper":
-            w, h, d = H.hmap3_paper_grid_shape(n)
-            return w * h * d
-    raise ValueError((n, kind, m))
+    if m == 3 and kind == "paper":
+        w, h, d = H.hmap3_paper_grid_shape(n)
+        return w * h * d
+    return SimplexSchedule(m, n, kind).steps

@@ -16,7 +16,15 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention
 from .hmap_mxu import hmap2_coords_mxu
-from .simplex_kernels import accum2d, accum3d, ca2d, ca3d, edm2d, map2d
+from .simplex_kernels import (
+    accum2d,
+    accum3d,
+    accum_md,
+    ca2d,
+    ca3d,
+    edm2d,
+    map2d,
+)
 
 __all__ = [
     "simplex_accum2d",
@@ -24,6 +32,7 @@ __all__ = [
     "simplex_ca2d",
     "simplex_accum3d",
     "simplex_ca3d",
+    "simplex_accum_md",
     "causal_flash_attention",
     "hmap_coords_mxu",
     "map_table",
@@ -53,6 +62,12 @@ def simplex_accum3d(x, rho: int = 4, kind: str = "table"):
 @functools.partial(jax.jit, static_argnames=("rho", "kind"))
 def simplex_ca3d(state, rho: int = 4, kind: str = "table"):
     return ca3d(state, rho=rho, kind=kind)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind"))
+def simplex_accum_md(x, rho: int = 2, kind: str = "table"):
+    """General-m accumulate; m = x.ndim (DESIGN.md §4)."""
+    return accum_md(x, rho=rho, kind=kind)
 
 
 @functools.partial(

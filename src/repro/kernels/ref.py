@@ -32,9 +32,9 @@ def tril_mask(n: int, dtype=jnp.bool_):
 def map_table_2d(n_blocks: int, kind: str):
     """Oracle for the MAP test: the (x, y[, valid]) table each schedule
     should produce, computed with the host-side core library."""
-    from repro.core.schedule import Schedule2D
+    from repro.core.schedule import SimplexSchedule
 
-    return Schedule2D(n_blocks, kind).table()
+    return SimplexSchedule(2, n_blocks, kind).table()
 
 
 def accum2d(x: jax.Array) -> jax.Array:

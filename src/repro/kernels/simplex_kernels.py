@@ -1,17 +1,23 @@
 """Pallas TPU kernels for the paper's four tests (Table 1) on simplex domains.
 
-Every kernel exists in (at least) two schedulings:
+All kernels draw their grid walk from the unified
+``core.schedule.SimplexSchedule`` subsystem (DESIGN.md §2.2); the
+``kind`` argument selects the registered schedule for the kernel's
+dimension:
 
 * ``kind='hmap'`` — the paper's block-space map as the ``BlockSpec``
-  index_map: the grid is the super-orthotope (zero waste for 2-simplex,
-  ~n^3/5 for the 3-simplex octant variant, exactly tet(n) blocks for the
-  table variant) and each grid step lands on a unique simplex tile.
+  index_map: zero waste for the 2-simplex, the recursive orthant map
+  for m >= 3 (~n^3/5 grid at m=3).
 * ``kind='rb'``   — rectangular-box fold [37] (2-simplex only).
-* ``kind='bb'``   — bounding box: full grid + per-tile discard
-  (``pl.when``), the baseline the paper speeds up against.
-* 3-simplex adds ``kind='octant'`` (closed-form exact, ours) and
-  ``kind='table'`` (scalar-prefetch coordinate table, the TPU-idiomatic
-  exact form).
+* ``kind='bb'``   — bounding box: full grid + per-tile discard,
+  the baseline the paper speeds up against.
+* ``kind='table'`` — scalar-prefetch coordinate table (the
+  TPU-idiomatic exact form, zero waste for any n; m >= 3 kernels
+  only — the 2D kernels launch a (w, h) grid); m=3 also keeps
+  ``kind='octant'`` as a named alias of the recursion.
+
+``accum_md`` extends the ACCUM test to arbitrary m (the first consumer
+of the m >= 4 schedules).
 
 TPU notes: tiles are (rho, rho) with rho a multiple of the 8x128-friendly
 sizes in production (tests use small rho under interpret=True; the grid /
@@ -22,18 +28,11 @@ by Pallas' end-of-step block flush.
 
 from __future__ import annotations
 
-import functools
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.hmap import hmap2_full, hmap3_octant, hmap3_octant_grid_size
-from repro.core.maps_baseline import rb_map2
-from repro.core.schedule import schedule3d_table
-from repro.core.simplex import tet
+from repro.core.schedule import SimplexSchedule, resolve_kind
 
 __all__ = [
     "map2d",
@@ -42,52 +41,32 @@ __all__ = [
     "ca2d",
     "accum3d",
     "ca3d",
+    "accum_md",
     "grid_steps_2d",
     "grid_steps_3d",
 ]
 
 
 # ---------------------------------------------------------------------------
-# schedule plumbing
+# schedule plumbing — all kernels consume the unified SimplexSchedule
+# subsystem (core/schedule.py); resolve_kind applies the kernel-facing
+# non-pow2 fallbacks (hmap -> rb/bb for m=2, hmap/octant -> table for
+# m >= 3).
 # ---------------------------------------------------------------------------
 
 
-def _sched2d(kind: str, nb: int):
-    """Returns (grid, map_fn) with map_fn: (wx, wy) -> (x, y, valid).
-
-    'hmap' requires a power-of-two tile count (paper §4.1); general nb
-    is served by the concurrent-trapezoid decomposition (§4.2,
-    core/trapezoids.py — one pallas_call per piece).  For a single-call
-    kernel on non-pow2 nb we fall back to RB (exact for any even nb)
-    or BB (odd nb) and note it — the production shapes are pow2.
-    """
-    if kind == "hmap" and (nb & (nb - 1)) != 0:
-        kind = "rb" if nb % 2 == 0 else "bb"
-    if kind == "rb" and nb % 2 != 0:
-        kind = "bb"
-    if kind == "hmap":
-        def fn(wx, wy):
-            x, y = hmap2_full(wx, wy, nb)
-            return x, y, jnp.ones_like(jnp.asarray(wx), dtype=jnp.bool_)
-
-        return (nb // 2, nb + 1), fn
-    if kind == "rb":
-        def fn(wx, wy):
-            x, y = rb_map2(wx, wy, nb)
-            return x, y, jnp.ones_like(jnp.asarray(wx), dtype=jnp.bool_)
-
-        return (nb // 2, nb + 1), fn
-    if kind == "bb":
-        def fn(wx, wy):
-            return wx, wy, wx <= wy
-
-        return (nb, nb), fn
-    raise ValueError(kind)
+def _schedule(m: int, nb: int, kind: str) -> SimplexSchedule:
+    if m == 2 and kind == "table":
+        raise ValueError(
+            "the 2D kernels launch a (w, h) grid; kind='table' (linear "
+            "scalar-prefetch walk) is only wired for the m >= 3 kernels — "
+            "use kind='hmap', 'rb', or 'bb'"
+        )
+    return SimplexSchedule(m, nb, resolve_kind(m, nb, kind))
 
 
 def grid_steps_2d(nb: int, kind: str) -> int:
-    (w, h), _ = _sched2d(kind, nb)
-    return w * h
+    return _schedule(2, nb, kind).steps
 
 
 # ---------------------------------------------------------------------------
@@ -99,8 +78,9 @@ def grid_steps_2d(nb: int, kind: str) -> int:
 
 def map2d(nb: int, kind: str = "hmap", chunk: int = 128) -> jax.Array:
     """Returns (steps, 3) int32: (x, y, valid) per grid step."""
-    (w, h), fn = _sched2d(kind, nb)
-    steps = w * h
+    sched = _schedule(2, nb, kind)
+    (w, h), fn = sched.grid, sched.map
+    steps = sched.steps
     padded = ((steps + chunk - 1) // chunk) * chunk
 
     def kernel(o_ref):
@@ -138,7 +118,8 @@ def accum2d(x: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
     n = x.shape[0]
     assert x.shape == (n, n) and n % rho == 0
     nb = n // rho
-    (w, h), fn = _sched2d(kind, nb)
+    sched = _schedule(2, nb, kind)
+    (w, h), fn = sched.grid, sched.map
 
     def in_map(wx, wy):
         xx, yy, v = fn(wx, wy)
@@ -179,7 +160,8 @@ def edm2d(p: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
     n, d = p.shape
     assert n % rho == 0
     nb = n // rho
-    (w, h), fn = _sched2d(kind, nb)
+    sched = _schedule(2, nb, kind)
+    (w, h), fn = sched.grid, sched.map
 
     def rows_map(wx, wy):
         _, yy, _ = fn(wx, wy)
@@ -234,7 +216,8 @@ def ca2d(state: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
     n = state.shape[0]
     assert state.shape == (n, n) and n % rho == 0
     nb = n // rho
-    (w, h), fn = _sched2d(kind, nb)
+    sched = _schedule(2, nb, kind)
+    (w, h), fn = sched.grid, sched.map
 
     shifts = [(dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
 
@@ -305,46 +288,21 @@ def ca2d(state: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _sched3d(kind: str, nb: int):
-    """Returns (steps, map_fn, table) — map_fn: (lin, tab_ref) -> (x,y,z,valid).
+def _sched_linear(m: int, nb: int, kind: str):
+    """Returns (steps, map_fn, table) from the SimplexSchedule subsystem —
+    map_fn: (lin[, tab_ref]) -> (*coords, valid).
 
-    ``table`` is a host numpy array passed via scalar prefetch when the
-    schedule is table-driven (the TPU-idiomatic exact form: the index map
-    reads three int32s from SMEM per grid step), else None and the map is
-    pure index arithmetic.
+    ``table`` is the schedule's scalar-prefetch payload when the walk is
+    table-driven (the TPU-idiomatic exact form: the index map reads m
+    int32s from SMEM per grid step), else None and the map is pure index
+    arithmetic.
     """
-    if kind == "octant":
-        steps = hmap3_octant_grid_size(nb)
-
-        def fn(lin, tab_ref=None):
-            return hmap3_octant(lin, nb)
-
-        return steps, fn, None
-    if kind == "table":
-        steps = tet(nb)
-
-        def fn(lin, tab_ref):
-            one = jnp.ones((), dtype=jnp.bool_)
-            return tab_ref[lin, 0], tab_ref[lin, 1], tab_ref[lin, 2], one
-
-        return steps, fn, schedule3d_table(nb)
-    if kind == "bb":
-        steps = nb**3
-
-        def fn(lin, tab_ref=None):
-            z = lin // (nb * nb)
-            r = lin - z * nb * nb
-            y = r // nb
-            x = r - y * nb
-            return x, y, z, (x + y + z) < nb
-
-        return steps, fn, None
-    raise ValueError(kind)
+    sched = _schedule(m, nb, kind)
+    return sched.steps, sched.map, sched.prefetch
 
 
 def grid_steps_3d(nb: int, kind: str) -> int:
-    steps, _, _ = _sched3d(kind, nb)
-    return steps
+    return _schedule(3, nb, kind).steps
 
 
 def accum3d(x: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
@@ -352,7 +310,7 @@ def accum3d(x: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
     n = x.shape[0]
     assert x.shape == (n, n, n) and n % rho == 0
     nb = n // rho
-    steps, fn, table = _sched3d(kind, nb)
+    steps, fn, table = _sched_linear(3, nb, kind)
 
     def in_map(i, *pref):
         bx, by, bz, v = fn(i, *pref)
@@ -376,7 +334,7 @@ def accum3d(x: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
         o_ref[...] = jnp.where(tet_m, x_ref[...] + 1, x_ref[...])
 
     xp = jnp.concatenate([x, jnp.zeros((rho, n, n), x.dtype)], axis=0)
-    grid_spec, args = _grid_spec_3d(
+    grid_spec, args = _grid_spec(
         table, steps, [pl.BlockSpec((rho, rho, rho), in_map)],
         pl.BlockSpec((rho, rho, rho), in_map),
     )
@@ -390,7 +348,7 @@ def accum3d(x: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
     return out[:n]
 
 
-def _grid_spec_3d(table, steps, in_specs, out_specs):
+def _grid_spec(table, steps, in_specs, out_specs):
     """Plain grid or scalar-prefetch grid, matching the schedule kind."""
     if table is None:
         return (
@@ -417,7 +375,7 @@ def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
     n = state.shape[0]
     assert state.shape == (n, n, n) and n % rho == 0
     nb = n // rho
-    steps, fn, table = _sched3d(kind, nb)
+    steps, fn, table = _sched_linear(3, nb, kind)
     shifts = [
         (dz, dy, dx) for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
     ]
@@ -488,7 +446,7 @@ def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
         o_ref[...] = jnp.where(tet_m, new, in_refs[centre_idx][...])
 
     sp = jnp.concatenate([state, jnp.zeros((rho, n, n), state.dtype)], axis=0)
-    grid_spec, args = _grid_spec_3d(
+    grid_spec, args = _grid_spec(
         table,
         steps,
         [pl.BlockSpec((rho, rho, rho), make_map(*s)) for s in shifts],
@@ -501,4 +459,71 @@ def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
         input_output_aliases={len(args) + centre_idx: 0},
         interpret=True,
     )(*args, *([sp] * 27))
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# ACCUM_MD — +1 on each cell of the general m-simplex (the first kernel
+# driven by the m >= 4 schedules: 'table' exact walk or the 'hmap'
+# orthant recursion).  Interpret-mode validated at m=4 in tests.
+# ---------------------------------------------------------------------------
+
+
+def accum_md(x: jax.Array, rho: int = 2, kind: str = "table") -> jax.Array:
+    """+1 on T(n) = {sum(coords) < n} for an m-cube input of shape (n,)*m.
+
+    m is taken from ``x.ndim`` (any m >= 3 — the linear-grid walks; the
+    2-simplex has dedicated kernels above).  The walk comes from
+    ``SimplexSchedule(m, n/rho, kind)``; schedule coordinates are in math
+    order (x_0 fastest) and array axis j holds x_{m-1-j}, matching the
+    3D kernels' (z, y, x) layout.  Out-of-domain grid steps park on a
+    trash tile appended along axis 0; untouched tiles keep their input
+    value via aliasing (in-place semantics).
+    """
+    m = x.ndim
+    assert m >= 3, "use accum2d for the 2-simplex (its grid is (w, h))"
+    n = x.shape[0]
+    assert all(s == n for s in x.shape) and n % rho == 0
+    nb = n // rho
+    steps, fn, table = _sched_linear(m, nb, kind)
+
+    def blocks_of(i, pref):
+        out = fn(i, *pref)
+        coords, v = out[:-1], out[-1]
+        return tuple(coords[::-1]), v  # axis order: axis 0 = x_{m-1}
+
+    def in_map(i, *pref):
+        blocks, v = blocks_of(i, pref)
+        return (jnp.where(v, blocks[0], nb),) + blocks[1:]
+
+    def kernel(*refs):
+        if table is not None:
+            pref = (refs[0],)
+            refs = refs[1:]
+        else:
+            pref = ()
+        x_ref, o_ref = refs
+        i = pl.program_id(0)
+        blocks, valid = blocks_of(i, pref)
+        shape = (rho,) * m
+        gsum = jnp.zeros(shape, jnp.int32)
+        for ax in range(m):
+            gsum = gsum + blocks[ax] * rho + jax.lax.broadcasted_iota(
+                jnp.int32, shape, ax
+            )
+        mask = (gsum < n) & valid
+        o_ref[...] = jnp.where(mask, x_ref[...] + 1, x_ref[...])
+
+    xp = jnp.concatenate(
+        [x, jnp.zeros((rho,) + x.shape[1:], x.dtype)], axis=0
+    )
+    spec = pl.BlockSpec((rho,) * m, in_map)
+    grid_spec, args = _grid_spec(table, steps, [spec], spec)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid_spec=grid_spec,
+        input_output_aliases={len(args): 0},
+        interpret=True,
+    )(*args, xp)
     return out[:n]

@@ -59,7 +59,7 @@ def test_ca2d_multi_step(kind):
     assert np.array_equal(np.asarray(ks)[m], np.asarray(rs)[m])
 
 
-@pytest.mark.parametrize("kind", ["table", "octant", "bb"])
+@pytest.mark.parametrize("kind", ["table", "octant", "hmap", "bb"])
 @pytest.mark.parametrize("n,rho", [(8, 2), (16, 4)])
 def test_accum3d(kind, n, rho):
     x = jax.random.randint(jax.random.PRNGKey(1), (n, n, n), 0, 50).astype(
@@ -83,6 +83,34 @@ def test_ca3d(kind):
         rs = R.ca3d_step(rs)
     m = np.asarray(R.tetra_mask(n))
     assert np.array_equal(np.asarray(ks)[m], np.asarray(rs)[m])
+
+
+@pytest.mark.parametrize("kind", ["table", "hmap", "bb"])
+@pytest.mark.parametrize("n,rho", [(4, 2), (8, 2)])
+def test_accum_md_m4(kind, n, rho):
+    """The general-m kernel at m=4, driven by the unified schedules."""
+    x = jax.random.randint(jax.random.PRNGKey(4), (n,) * 4, 0, 50).astype(
+        jnp.int32
+    )
+    got = np.asarray(K.accum_md(x, rho=rho, kind=kind))
+    mask = np.indices((n,) * 4).sum(0) < n
+    want = np.asarray(x) + mask
+    assert np.array_equal(got[mask], want[mask])
+    # out-of-domain untouched (in-place semantics)
+    assert np.array_equal(got[~mask], np.asarray(x)[~mask])
+
+
+@pytest.mark.parametrize("kind", ["table", "hmap", "bb"])
+def test_accum_md_matches_accum3d(kind):
+    """At m=3 the generic kernel reduces to the dedicated 3D one."""
+    n, rho = 8, 2
+    x = jax.random.randint(jax.random.PRNGKey(6), (n, n, n), 0, 50).astype(
+        jnp.int32
+    )
+    got = K.accum_md(x, rho=rho, kind=kind)
+    want = K.accum3d(x, rho=rho, kind=kind)
+    m = np.asarray(R.tetra_mask(n))
+    assert np.array_equal(np.asarray(got)[m], np.asarray(want)[m])
 
 
 @pytest.mark.parametrize(

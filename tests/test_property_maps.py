@@ -13,6 +13,13 @@ Invariants under test:
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis is a dev extra (pip install -e '.[dev]'); "
+    "the deterministic schedule invariants run in tests/test_schedule.py",
+)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -102,3 +109,17 @@ def test_folded_schedule_unique_step(k, data):
 @settings(max_examples=300, deadline=None)
 def test_pow2_floor_matches_bitlength(v):
     assert H.pow2_floor(v) == 1 << (int(v).bit_length() - 1)
+
+
+@given(m=st.integers(2, 6), k=st.integers(1, 5), data=st.data())
+@settings(max_examples=150, deadline=None)
+def test_recursive_m_map_cells_valid(m, k, data):
+    """Any valid cell of the general-m orthant recursion lands in T(n)."""
+    n = 1 << k
+    g = H.hmap_m_grid_size(n, m)
+    i = data.draw(st.integers(0, g - 1))
+    out = H.hmap_m_recursive(np.asarray([i]), n, m)
+    coords, valid = out[:-1], out[-1]
+    if valid[0]:
+        assert all(c[0] >= 0 for c in coords)
+        assert sum(c[0] for c in coords) < n

@@ -1,0 +1,144 @@
+"""SimplexSchedule subsystem invariants (exhaustive, no hypothesis).
+
+Every registered (m, kind) schedule must *visit each simplex cell
+exactly once* over its valid steps — the bijectivity contract the
+kernels rely on — and the recursive m-map's measured waste must respect
+the paper's asymptotic extra-space bound (Eq. 30 generalized) with a
+finite-n allowance.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.general_m import alpha_extra_space, best_r_beta
+from repro.core.schedule import (
+    Schedule2D,
+    SimplexSchedule,
+    grid_steps,
+    registered_kinds,
+    resolve_kind,
+)
+from repro.core.simplex import simplex_volume
+
+CASES = [
+    (m, n, kind)
+    for m, ns in [(2, [4, 16]), (3, [4, 8]), (4, [4, 8])]
+    for n in ns
+    for kind in registered_kinds(m)
+]
+
+
+def _in_domain(m, coords, n):
+    """m=2 uses the matrix (col, row) lower-triangle convention
+    {0 <= x <= y <= n-1} (causal attention tiles, |.| = tri(n));
+    m >= 3 uses the standard simplex {x >= 0, sum(x) < n}."""
+    if m == 2:
+        return (
+            (coords[:, 0] >= 0)
+            & (coords[:, 0] <= coords[:, 1])
+            & (coords[:, 1] < n)
+        )
+    return (coords >= 0).all(axis=1) & (coords.sum(axis=1) < n)
+
+
+@pytest.mark.parametrize("m,n,kind", CASES)
+def test_schedule_bijective_on_simplex(m, n, kind):
+    """Valid steps cover the m-simplex exactly once; coords in-domain."""
+    sched = SimplexSchedule(m, n, kind)
+    tab = sched.table()
+    assert tab.shape == (sched.steps, m + 1)
+    assert sched.steps == int(np.prod(sched.grid))
+    valid = tab[:, -1] == 1
+    coords = tab[valid, :-1]
+    assert _in_domain(m, coords, n).all()
+    pts = set(map(tuple, coords.tolist()))
+    assert len(pts) == len(coords) == sched.useful == simplex_volume(n, m)
+
+
+@pytest.mark.parametrize("m,n,kind", CASES)
+def test_schedule_map_dual_backend(m, n, kind):
+    """The jax-traced map agrees with the host numpy walk table."""
+    import jax.numpy as jnp
+
+    sched = SimplexSchedule(m, n, kind)
+    want = sched.table()
+    lin = np.arange(sched.steps, dtype=np.int64)
+    ws = []
+    for g in sched.grid:
+        ws.append(jnp.asarray(lin % g, dtype=jnp.int32))
+        lin = lin // g
+    if sched.needs_table:
+        ws.append(jnp.asarray(sched.prefetch))
+    out = sched.map(*ws)
+    got = np.stack(
+        [np.asarray(c, dtype=np.int64) for c in out[:-1]]
+        + [np.asarray(out[-1]).astype(np.int64)],
+        axis=1,
+    )
+    assert np.array_equal(got, want.astype(np.int64))
+
+
+@pytest.mark.parametrize("m", [2, 3, 4, 5])
+def test_recursive_waste_within_asymptotic_bound(m):
+    """Measured waste of the (2, m) recursion stays within the Lemma 6.1
+    asymptote + 25% finite-n allowance once n clears the tiny sizes."""
+    inv_r, beta = best_r_beta(m, constructible=True)
+    assert (inv_r, beta) == (2, m)
+    bound = alpha_extra_space(m, inv_r, beta) + 0.25
+    for n in (8, 16, 32):
+        sched = SimplexSchedule(m, n, "hmap")
+        assert sched.waste() <= bound, (m, n, sched.waste(), bound)
+        assert sched.asymptotic_waste() == alpha_extra_space(m, inv_r, beta)
+
+
+def test_m4_hmap_bijective_and_bounded():
+    """The ISSUE acceptance shape: SimplexSchedule(4, n, 'hmap') is a
+    bijection onto Delta^4 with waste <= alpha(4, 2, 4) + 25%."""
+    n = 16
+    sched = SimplexSchedule(4, n, "hmap")
+    tab = sched.table()
+    valid = tab[:, -1] == 1
+    coords = tab[valid, :-1]
+    assert _in_domain(4, coords, n).all()
+    pts = set(map(tuple, coords.tolist()))
+    assert len(pts) == simplex_volume(n, 4)
+    assert sched.waste() <= alpha_extra_space(4, 2, 4) + 0.25
+
+
+def test_registered_kinds_per_dimension():
+    assert set(registered_kinds(2)) == {"hmap", "rb", "bb", "table"}
+    assert set(registered_kinds(3)) == {"hmap", "octant", "bb", "table"}
+    assert set(registered_kinds(4)) == {"hmap", "bb", "table"}
+    with pytest.raises(ValueError):
+        SimplexSchedule(2, 8, "octant")
+    with pytest.raises(ValueError):
+        SimplexSchedule(1, 8, "hmap")
+
+
+def test_resolve_kind_fallbacks():
+    # m=2: non-pow2 hmap -> rb (even) or bb (odd); odd rb -> bb
+    assert resolve_kind(2, 6, "hmap") == "rb"
+    assert resolve_kind(2, 7, "hmap") == "bb"
+    assert resolve_kind(2, 7, "rb") == "bb"
+    assert resolve_kind(2, 8, "hmap") == "hmap"
+    # m>=3: non-pow2 recursion -> exact table walk
+    assert resolve_kind(3, 6, "octant") == "table"
+    assert resolve_kind(4, 10, "hmap") == "table"
+    assert resolve_kind(4, 16, "hmap") == "hmap"
+
+
+def test_grid_steps_delegates_across_dimensions():
+    assert grid_steps(16, "hmap") == 8 * 17
+    assert grid_steps(16, "bb", m=3) == 16**3
+    assert grid_steps(16, "table", m=4) == simplex_volume(16, 4)
+    # the paper's potential-speedup ordering: hmap beats bb for every m
+    for m in (2, 3, 4):
+        assert grid_steps(16, "bb", m=m) > grid_steps(16, "hmap", m=m)
+
+
+def test_schedule2d_shim_deprecated_but_equivalent():
+    with pytest.warns(DeprecationWarning):
+        old = Schedule2D(8, "hmap")
+    new = SimplexSchedule(2, 8, "hmap")
+    assert old.grid == new.grid and old.steps == new.steps
+    assert np.array_equal(old.table(), new.table())
