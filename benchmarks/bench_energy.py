@@ -13,37 +13,50 @@ than BB (full occupancy) but finishes sooner, netting the best EPS/W —
 under any monotone (P_idle, P_dyn), occupancy-1 maps dominate EPS/W
 because T shrinks faster than P grows.  The launched-work ratios
 underneath are hardware-independent.
+
+Occupancy and launched steps come straight from the unified
+``SimplexSchedule`` surface (``.steps`` / ``.waste()``), so every
+registered kind — including the m=4 recursion and the general-n
+composite decomposition — is scored by the same model.
 """
 
 from __future__ import annotations
 
-from repro.core.schedule import grid_steps
-from repro.core.simplex import tet, tri
+from repro.core.schedule import SimplexSchedule
 
 P_IDLE, P_DYN = 60.0, 140.0
 
 
-def _row(test, kind, launched, useful, elements):
-    occ = useful / launched
+def _row(test: str, m: int, n: int, kind: str):
+    sched = SimplexSchedule(m, n, kind)
+    launched, useful = sched.steps, sched.useful
+    occ = 1.0 / (1.0 + sched.waste())  # useful/launched, from the schedule
     t = float(launched)  # time units ~ grid steps
     p = P_IDLE + P_DYN * occ
-    eps_w = elements / (t * p)
+    eps_w = useful / (t * p)
     return {
-        "test": test, "map": kind, "launched": launched,
+        "test": test, "map": kind, "m": m, "n": n, "launched": launched,
         "occupancy": occ, "power_model_w": p,
         "energy_model": t * p, "eps_per_w_rel": eps_w,
     }
 
 
-def run(nb2: int = 256, nb3: int = 64):
+# (test label, m, n, kinds) — nb=100 exercises the general-n composite
+# path (non-pow2, analytical); the m=4 group is the ROADMAP refresh.
+GROUPS = [
+    ("2-simplex", 2, 256, ["hmap", "rb", "bb"]),
+    ("3-simplex", 3, 64, ["table", "octant", "bb"]),
+    ("3-simplex-generaln", 3, 100, ["composite", "table", "bb"]),
+    ("4-simplex", 4, 16, ["hmap", "table", "bb"]),
+    ("4-simplex-generaln", 4, 24, ["composite", "table", "bb"]),
+]
+
+
+def run(groups=GROUPS):
     rows = []
-    el2, el3 = tri(nb2), tet(nb3)
-    for kind in ["hmap", "rb", "bb"]:
-        rows.append(_row("2-simplex", kind, grid_steps(nb2, kind), el2, el2))
-    for kind in ["table", "octant", "bb"]:
-        rows.append(_row("3-simplex", kind, grid_steps(nb3, kind, m=3), el3, el3))
-    # normalize eps/w to BB = 1.0 per test
-    for test in ("2-simplex", "3-simplex"):
+    for test, m, n, kinds in groups:
+        for kind in kinds:
+            rows.append(_row(test, m, n, kind))
         base = next(r for r in rows if r["test"] == test and r["map"] == "bb")
         for r in rows:
             if r["test"] == test:
@@ -53,10 +66,11 @@ def run(nb2: int = 256, nb3: int = 64):
 
 def main():
     rows = run()
-    print("test,map,launched_steps,occupancy,power_w,eps_per_w_vs_bb")
+    print("test,map,m,n,launched_steps,occupancy,power_w,eps_per_w_vs_bb")
     for r in rows:
-        print(f"{r['test']},{r['map']},{r['launched']},{r['occupancy']:.3f},"
-              f"{r['power_model_w']:.0f},{r['eps_per_w_vs_bb']:.2f}")
+        print(f"{r['test']},{r['map']},{r['m']},{r['n']},{r['launched']},"
+              f"{r['occupancy']:.3f},{r['power_model_w']:.0f},"
+              f"{r['eps_per_w_vs_bb']:.2f}")
     return rows
 
 

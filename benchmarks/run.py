@@ -54,6 +54,35 @@ def _map_rows_md(m: int = 4, n: int = 16, rho: int = 2):
     return rows
 
 
+def _composite_rows():
+    """Composite-vs-table at non-pow2 n, m in {2, 3, 4} (DESIGN.md §4.2).
+
+    Two facts per (m, n): the parallel-space cost (grid_steps/waste — the
+    composite pays a bounded analytical premium, the table walk is exact)
+    and the HOST-side schedule-construction wall time (us_per_call) — the
+    table kind pays the O(V) enumeration, the composite O(pieces).  The
+    n ladder quadruples per m so the artifact shows the table build time
+    scaling ~V while the composite stays flat.
+    """
+    from repro.core.schedule import SimplexSchedule
+
+    ladders = {2: [24, 96, 384, 1536], 3: [24, 96, 192], 4: [24, 48]}
+    rows = []
+    for m, ns in ladders.items():
+        for n in ns:
+            for kind in ("composite", "table"):
+                t0 = time.perf_counter()
+                sched = SimplexSchedule(m, n, kind)
+                sched.prefetch  # force the table build (lazy; None for composite)
+                build_us = (time.perf_counter() - t0) * 1e6
+                rows.append({
+                    "test": f"SCHED_BUILD{m}D", "map": kind, "m": m, "n": n,
+                    "grid_steps": sched.steps, "waste": sched.waste(),
+                    "us_per_call": build_us,
+                })
+    return rows
+
+
 def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
     """Persist steps/waste/wall-time per (kind, m, n) for perf tracking."""
     artifact = {
@@ -102,6 +131,11 @@ def main() -> None:
     for r in rm:
         print(f"{r['test']},{r['map']},{r['grid_steps']},{r['waste']:.3f},"
               f"{r['us_per_call']:.0f}")
+    print("# ==== §4.2: composite vs table at non-pow2 n (host build) ====")
+    rc = _composite_rows()
+    for r in rc:
+        print(f"{r['test']},{r['map']},n={r['n']},{r['grid_steps']},"
+              f"{r['waste']:.3f},build_us={r['us_per_call']:.0f}")
     print("# ==== Fig.12/15: energy (modeled) ====")
     re = bench_energy.main()
     print("# ==== §6: general-m (r,beta) ====")
@@ -109,7 +143,7 @@ def main() -> None:
     print("# ==== beyond-paper: folded causal attention ====")
     ra = bench_attention.main()
 
-    path = write_maps_artifact(r2 + r3 + rm)
+    path = write_maps_artifact(r2 + r3 + rm + rc)
     print(f"# wrote {path}")
 
     print("# ==== summary: name,us_per_call,derived ====")
@@ -124,6 +158,9 @@ def main() -> None:
     for r in rm:
         print(f"md/{r['test']}/{r['map']},{r['us_per_call']:.0f},"
               f"space_speedup={r['space_speedup_vs_bb']:.3f}")
+    for r in rc:
+        print(f"sched/{r['test']}/{r['map']}/n={r['n']},"
+              f"{r['us_per_call']:.0f},waste={r['waste']:.3f}")
     for r in re:
         print(f"fig12/{r['test']}/{r['map']},0,"
               f"eps_per_w_vs_bb={r['eps_per_w_vs_bb']:.2f}")

@@ -72,6 +72,8 @@ def potential_speedup(m: int, inv_r: int = 2, beta: int = 2) -> float:
 
 @dataclass(frozen=True)
 class RBeta:
+    """One feasible (1/r, beta) lattice point of the Thm 6.2 optimization."""
+
     inv_r: int
     beta: int
     alpha: float  # asymptotic extra space fraction

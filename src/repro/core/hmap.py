@@ -76,6 +76,8 @@ __all__ = [
     "hmap3_octant_grid_size",
     "hmap_m_recursive",
     "hmap_m_grid_size",
+    "hmap_factor",
+    "hmap_factor_grid_size",
 ]
 
 
@@ -351,6 +353,70 @@ def hmap_m_recursive(idx, n: int, m: int, inv_r: int = 2, beta=None):
         lsum = lsum + lj
     valid = lsum < bound
     return coords + (valid,)
+
+
+def hmap_factor_grid_size(side: int, dim: int) -> int:
+    """Grid cells ``hmap_factor`` launches for a (dim, side) simplex factor.
+
+    Zero waste for dim <= 2 (interval / inclusive-diagonal 2-simplex
+    grid); for dim >= 3 the orthant recursion's grid
+    (``hmap_m_grid_size``).  O(log side) arithmetic — never O(V).
+    """
+    if side == 1:
+        return 1
+    if dim == 1:
+        return side
+    if dim == 2:
+        return (side // 2) * (side + 1)
+    return hmap_m_grid_size(side, dim)
+
+
+def hmap_factor(idx, side: int, dim: int):
+    """Offset-aware recursion entry: linear idx -> one T^dim(side) factor.
+
+    The composite (general-n) schedule decomposes a simplex into chained
+    power-of-two *factors* (core/trapezoids.py §4.2); this is the single
+    decoder every factor uses, dispatching on dimension:
+
+    * ``side == 1`` — the point factor T^d(1) = {0}^d (grid 1).
+    * ``dim == 1``  — interval [0, side), identity, any side, zero waste.
+    * ``dim == 2``  — strict-sum 2-simplex {u + v < side} through the
+      zero-waste inclusive-diagonal grid ``hmap2_full`` (side a power of
+      two), flipped by v = side-1-row.
+    * ``dim >= 3``  — ``hmap_m_recursive`` (side a power of two).
+
+    Returns ``(c_0, ..., c_{dim-1}, valid)`` with ``sum(c) < side`` on
+    valid cells; the factor's local coordinates are exchangeable (the
+    domain is symmetric), so callers may apply their shear offset to any
+    one output slot.  Dual-backend like every map in this module.
+    """
+    if side == 1:
+        if _is_jax(idx):
+            import jax.numpy as jnp
+
+            z = jnp.zeros_like(jnp.asarray(idx))
+            return (z,) * dim + (jnp.ones_like(z, dtype=jnp.bool_),)
+        z = np.zeros_like(np.asarray(idx, dtype=np.int64))
+        return (z,) * dim + (np.ones_like(z, dtype=bool),)
+    if dim == 1:
+        if _is_jax(idx):
+            import jax.numpy as jnp
+
+            idx = jnp.asarray(idx)
+            return idx, jnp.ones_like(idx, dtype=jnp.bool_)
+        idx = np.asarray(idx, dtype=np.int64)
+        return idx, np.ones_like(idx, dtype=bool)
+    if dim == 2:
+        w = side // 2
+        wy = idx // w
+        wx = idx - wy * w
+        col, row = hmap2_full(wx, wy, side)
+        if _is_jax(col):
+            import jax.numpy as jnp
+
+            return col, (side - 1) - row, jnp.ones_like(col, dtype=jnp.bool_)
+        return col, (side - 1) - row, np.ones_like(np.asarray(col), dtype=bool)
+    return hmap_m_recursive(idx, side, dim)
 
 
 def hmap3_octant_grid_size(n: int) -> int:

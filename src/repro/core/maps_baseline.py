@@ -59,6 +59,7 @@ def bb_valid2(x, y):
 
 
 def bb_map3(wx, wy, wz) -> Tuple[Any, Any, Any]:
+    """Identity bounding-box map for the 3-simplex (pair with bb_valid3)."""
     return wx, wy, wz
 
 
@@ -159,6 +160,7 @@ def lambda_fp32_exact_range_2d() -> int:
 
 
 def tri_total(n: int) -> int:
+    """Triangular number n(n+1)/2 — the lambda maps' linear-domain size."""
     return n * (n + 1) // 2
 
 

@@ -21,11 +21,19 @@ schedule exposes the same surface —
 Registered kinds
 ----------------
 * m=2: ``hmap`` (zero-waste H grid), ``rb`` (RB fold [37]), ``bb``
-  (bounding box + predicate), ``table`` (scalar-prefetch exact walk).
+  (bounding box + predicate), ``table`` (scalar-prefetch exact walk),
+  ``composite`` (general-n trapezoid/shell pieces, zero waste at m=2).
 * m=3: ``hmap``/``octant`` (r=1/2, beta=3 recursion, ~20% waste),
-  ``table`` (0% waste), ``bb``.
+  ``table`` (0% waste), ``bb``, ``composite`` (any n, analytical).
 * m>=4: ``hmap`` (orthant recursion, (1/r, beta) from
-  ``general_m.best_r_beta(m, constructible=True)``), ``table``, ``bb``.
+  ``general_m.best_r_beta(m, constructible=True)``), ``table``, ``bb``,
+  ``composite``.
+
+``composite`` (DESIGN.md §4.2) serves *arbitrary* n at every m: the
+simplex decomposes into a power-of-two core plus sheared-prism shell
+pieces (core/trapezoids.py), concatenated into one linear grid whose
+map is pure index arithmetic — host-side construction is O(pieces),
+never the O(V) enumeration the ``table`` kind pays.
 
 ``folded_causal_pairs`` — the load-balanced causal sequence-parallel
 partition: query-tile i pairs with n-1-i so every pair owns (n+1) KV
@@ -44,6 +52,7 @@ import numpy as np
 from . import hmap as H
 from .general_m import alpha_extra_space, best_r_beta
 from .simplex import enumerate_simplex, simplex_volume, tet, tri
+from .trapezoids import composite_map, decompose_simplex
 
 __all__ = [
     "SimplexSchedule",
@@ -84,18 +93,47 @@ _REGISTRY: Dict[Tuple[Optional[int], str], Callable[[int, int], _Spec]] = {}
 
 
 def register_schedule(m: Optional[int], kind: str):
-    """Register a schedule builder for (dimension, kind); ``m=None``
-    registers a dimension-generic fallback."""
+    """Register a schedule builder for a (dimension, kind) pair.
 
-    def deco(builder):
+    Args:
+        m: Exact dimension the builder serves, or ``None`` to register a
+            dimension-generic fallback used by any m without an exact
+            ``(m, kind)`` entry.
+        kind: Schedule kind name (e.g. ``"hmap"``, ``"composite"``).
+
+    Returns:
+        A decorator that records ``builder(m, n) -> _Spec`` in the
+        registry and returns it unchanged.  Usage::
+
+            @register_schedule(None, "mykind")
+            def _build_mykind(m, n) -> _Spec: ...
+
+    Example:
+        >>> "hmap" in registered_kinds(2)  # builders self-register at import
+        True
+    """
+
+    def _deco(builder):
         _REGISTRY[(m, kind)] = builder
         return builder
 
-    return deco
+    return _deco
 
 
 def registered_kinds(m: int) -> Tuple[str, ...]:
-    """Kinds available for dimension m (exact + generic registrations)."""
+    """Kinds available for dimension m (exact + generic registrations).
+
+    Args:
+        m: Simplex dimension.
+
+    Returns:
+        Sorted tuple of kind names ``SimplexSchedule(m, n, kind)``
+        accepts at this dimension.
+
+    Example:
+        >>> registered_kinds(4)
+        ('bb', 'composite', 'hmap', 'table')
+    """
     kinds = {k for mm, k in _REGISTRY if mm == m or mm is None}
     return tuple(sorted(kinds))
 
@@ -103,11 +141,28 @@ def registered_kinds(m: int) -> Tuple[str, ...]:
 def resolve_kind(m: int, n: int, kind: str) -> str:
     """Kernel-facing kind resolution (the §4.1 power-of-two constraint).
 
-    'hmap' requires a power-of-two tile count; general n is served by the
-    concurrent-trapezoid decomposition (§4.2, core/trapezoids.py — one
-    pallas_call per piece).  For a single-call kernel on non-pow2 n we
-    fall back to RB (exact for any even n, m=2), the exact table walk
-    (m >= 3), or BB — the production shapes are pow2.
+    'hmap' requires a power-of-two tile count.  For non-pow2 n the
+    analytical answer is the §4.2 decomposition: at m >= 3 the requested
+    recursion resolves to ``'composite'`` — the general-n piecewise map
+    (core/trapezoids.py), one linear grid, O(pieces) host-side cost.  At
+    m = 2 the dedicated (w, h)-grid kernels instead fall back to RB
+    (exact for any even n) or BB (odd n); the m=2 composite kind exists
+    for linear-grid consumers and analysis.
+
+    Args:
+        m: Simplex dimension of the kernel's domain.
+        n: Tile count per side (the kernel-facing problem size).
+        kind: Requested schedule kind.
+
+    Returns:
+        The kind actually constructible at this (m, n) — ``kind`` itself
+        whenever it is exact there.
+
+    Example:
+        >>> resolve_kind(3, 6, "hmap"), resolve_kind(4, 100, "hmap")
+        ('composite', 'composite')
+        >>> resolve_kind(4, 16, "hmap"), resolve_kind(2, 6, "hmap")
+        ('hmap', 'rb')
     """
     pow2 = n >= 2 and (n & (n - 1)) == 0
     if m == 2:
@@ -117,7 +172,7 @@ def resolve_kind(m: int, n: int, kind: str) -> str:
             kind = "bb"
         return kind
     if kind in ("hmap", "octant") and not pow2:
-        return "table"
+        return "composite"
     return kind
 
 
@@ -130,6 +185,20 @@ class SimplexSchedule:
     ``grid=``/``BlockSpec.index_map``; table-driven kinds additionally
     ship ``.prefetch`` through ``PrefetchScalarGridSpec`` and their
     ``.map`` takes the prefetched ref as a trailing argument.
+
+    Args (constructor):
+        m: Simplex dimension, m >= 2.
+        n: Side length in tile units (any n >= 1 for ``composite``/
+            ``table``/``bb``; power-of-two for the ``hmap`` recursions).
+        kind: Registered kind name; see ``registered_kinds(m)``.
+
+    Example:
+        >>> sched = SimplexSchedule(3, 6, "composite")  # non-pow2 n
+        >>> sched.steps, sched.useful, round(sched.waste(), 3)
+        (72, 56, 0.286)
+        >>> tab = sched.table()  # (steps, m+1): (*coords, valid)
+        >>> tab.shape
+        (72, 4)
     """
 
     def __init__(self, m: int, n: int, kind: str = "hmap"):
@@ -149,10 +218,12 @@ class SimplexSchedule:
 
     @property
     def grid(self) -> Tuple[int, ...]:
+        """Grid dimensions to launch (``(w, h)`` for 2-D walks, else linear)."""
         return self._spec.grid
 
     @property
     def steps(self) -> int:
+        """Total grid steps — the paper's "parallel space" (O(1) arithmetic)."""
         s = 1
         for g in self._spec.grid:
             s *= g
@@ -160,10 +231,12 @@ class SimplexSchedule:
 
     @property
     def useful(self) -> int:
+        """Simplex cells the walk must cover, ``V(Delta^m_n)``."""
         return self._spec.useful
 
     @property
     def needs_table(self) -> bool:
+        """True when this kind walks a host-built scalar-prefetch table."""
         return self._spec.table_builder is not None
 
     @property
@@ -180,18 +253,48 @@ class SimplexSchedule:
         return self._table_cache
 
     def map(self, *w):
-        """(*w) -> (*coords, valid).  Dual-backend; for table-driven
-        kinds the last argument is the prefetched table ref."""
+        """Map grid coordinates to data-tile coordinates.
+
+        Args:
+            *w: One index/array per grid axis (fastest axis first); for
+                table-driven kinds, the prefetched table ref last.
+
+        Returns:
+            ``(*coords, valid)`` — m data coordinates plus the validity
+            flag.  Dual-backend (numpy arrays or jax tracers).
+
+        Example:
+            >>> import numpy as np
+            >>> s = SimplexSchedule(2, 4, "hmap")
+            >>> x, y, v = s.map(np.arange(2), np.zeros(2, np.int64))
+            >>> x.tolist(), y.tolist(), v.tolist()
+            ([0, 1], [0, 1], [True, True])
+        """
         return self._spec.map_fn(*w)
 
     # -- accounting --------------------------------------------------------
 
     def waste(self) -> float:
-        """Measured extra parallel space at this n: steps/useful - 1."""
+        """Measured extra parallel space at this n.
+
+        Returns:
+            ``steps/useful - 1`` — 0.0 for exact (zero-waste) walks.
+
+        Example:
+            >>> SimplexSchedule(2, 100, "composite").waste()
+            0.0
+        """
         return self.steps / self.useful - 1.0
 
     def asymptotic_waste(self) -> Optional[float]:
-        """inf-n extra-space fraction of this kind (None if unknown)."""
+        """inf-n extra-space fraction of this kind (None if unknown).
+
+        Returns:
+            The registered alpha: exact limit for single-map kinds, an
+            upper bound for ``composite`` (whose measured waste at
+            non-pow2 n is typically far lower — the shell pieces are
+            lower-dimensional).
+        """
         return self._spec.alpha
 
     # -- host-side enumeration ---------------------------------------------
@@ -336,6 +439,39 @@ def _build_md_table(m: int, n: int) -> _Spec:
     )
 
 
+@register_schedule(None, "composite")
+def _build_composite(m: int, n: int) -> _Spec:
+    """General-n composite schedule: pow2 core + shell pieces, one grid.
+
+    Pieces from ``trapezoids.decompose_simplex`` are concatenated into a
+    single linear grid; the map selects the piece by static prefix
+    offsets and decodes its power-of-two factor chain (all index
+    arithmetic — usable as a Pallas index_map, no scalar prefetch).  At
+    m=2 the strict-sum coordinates are flipped into the repo's
+    (col, row) lower-triangle convention; every m=2 factor has dim <= 2
+    so the m=2 composite is exactly zero waste (the trapezoid scheme).
+    For m >= 3 the asymptotic extra space is bounded by the core
+    recursion's alpha; measured waste at non-pow2 n sits well below it
+    (shell pieces are lower-dimensional).
+    """
+    pieces = decompose_simplex(m, n)
+    steps = sum(p.grid_cells for p in pieces)
+
+    if m == 2:
+
+        def fn(lin):
+            u, v, ok = composite_map(pieces, 2, lin)
+            return u, (n - 1) - v, ok  # strict (u, v) -> (col, row)
+
+    else:
+
+        def fn(lin):
+            return composite_map(pieces, m, lin)
+
+    alpha = 0.0 if m == 2 else alpha_extra_space(m, 2, m)
+    return _Spec((steps,), fn, simplex_volume(n, m), alpha=alpha)
+
+
 @register_schedule(None, "bb")
 def _build_md_bb(m: int, n: int) -> _Spec:
     import math
@@ -391,26 +527,43 @@ class Schedule2D:
 
     @property
     def grid(self) -> Tuple[int, int]:
+        """(width, height) of the delegated ``SimplexSchedule(2, ...)``."""
         return self._s.grid
 
     @property
     def steps(self) -> int:
+        """Total grid steps of the delegated schedule."""
         return self._s.steps
 
     @property
     def useful(self) -> int:
+        """Lower-triangle tiles to cover, ``tri(n)``."""
         return self._s.useful
 
     def map(self, wx, wy):
+        """Delegate to ``SimplexSchedule.map``: (wx, wy) -> (x, y, valid)."""
         return self._s.map(wx, wy)
 
     def table(self) -> np.ndarray:
+        """Delegate to ``SimplexSchedule.table()``."""
         return self._s.table()
 
 
 def schedule2d_table(n: int) -> np.ndarray:
     """Exact (tri(n), 2) int32 table of lower-triangle tiles, diagonal-first
-    order (diagonal tiles first so masked tiles are contiguous)."""
+    order (diagonal tiles first so masked tiles are contiguous).
+
+    Args:
+        n: Tile count per side.
+
+    Returns:
+        ``(tri(n), 2)`` int32 array of (col, row) pairs — the O(V)
+        scalar-prefetch payload of the m=2 ``table`` kind.
+
+    Example:
+        >>> schedule2d_table(2).tolist()
+        [[0, 0], [1, 1], [0, 1]]
+    """
     cols, rows = [], []
     for y in range(n):
         cols.append(y)
@@ -424,7 +577,20 @@ def schedule2d_table(n: int) -> np.ndarray:
 
 def schedule3d_table(n: int) -> np.ndarray:
     """Exact (tet(n), 3) int32 table of T(n) tiles (zero waste, the
-    TPU-idiomatic scalar-prefetch form)."""
+    TPU-idiomatic scalar-prefetch form).
+
+    Args:
+        n: Tile count per side.
+
+    Returns:
+        ``(tet(n), 3)`` int32 array of (x, y, z) with x+y+z < n, x
+        fastest — the O(V) scalar-prefetch payload of the m=3 ``table``
+        kind.
+
+    Example:
+        >>> schedule3d_table(2).tolist()
+        [[0, 0, 0], [1, 0, 0], [0, 1, 0], [0, 0, 1]]
+    """
     pts = []
     for z in range(n):
         for y in range(n - z):
@@ -438,7 +604,18 @@ def schedule3d_table(n: int) -> np.ndarray:
 def folded_causal_pairs(n_tiles: int) -> np.ndarray:
     """(n_tiles/2, 2) pairs (i, n-1-i): each pair owns i+1 + n-i = n+1 KV
     tiles — the equal-area causal partition used for sequence-parallel
-    sharding and by the flash kernel's folded grid."""
+    sharding and by the flash kernel's folded grid.
+
+    Args:
+        n_tiles: Even number of query tiles.
+
+    Returns:
+        ``(n_tiles/2, 2)`` int32 array of folded query-tile pairs.
+
+    Example:
+        >>> folded_causal_pairs(4).tolist()
+        [[0, 3], [1, 2]]
+    """
     assert n_tiles % 2 == 0
     i = np.arange(n_tiles // 2, dtype=np.int32)
     return np.stack([i, n_tiles - 1 - i], 1)
@@ -448,6 +625,19 @@ def grid_steps(n: int, kind: str, m: int = 2) -> int:
     """Grid steps each schedule launches — the paper's 'parallel space'.
 
     The MAP-test speedup claim is the BB/steps ratio of these numbers.
+
+    Args:
+        n: Tile count per side.
+        kind: Registered kind, or ``"paper"`` at m=3 for the literal
+            Eq. 26 grid shape.
+        m: Simplex dimension (default 2).
+
+    Returns:
+        Total grid steps of ``SimplexSchedule(m, n, kind)``.
+
+    Example:
+        >>> grid_steps(16, "hmap"), grid_steps(16, "bb")
+        (136, 256)
     """
     if m == 3 and kind == "paper":
         w, h, d = H.hmap3_paper_grid_shape(n)

@@ -1,30 +1,39 @@
-"""Concurrent-trapezoids extension of H to general n (paper §4.2, option 3).
+"""Decompositions of general-n simplex domains into power-of-two pieces.
 
-For non-power-of-two n, the simplex is decomposed into a small set of
-trapezoids: power-of-two triangles along the diagonal, each with the
-rectangular "box" completing its rows to the left.  The set follows the
-paper's rule — approach n from below with power-of-two pieces; the last
-piece approaches from above when the remainder drops under the threshold
-``T`` (limiting the set size; worst case log2 n pieces, typically ~2-4).
+The paper's map H requires a power-of-two n (§4.1) and handles general n
+by decomposing the domain into a small set of exactly-schedulable pieces
+(§4.2).  This module implements both generations of that idea:
 
-Each trapezoid gets its own *exact* grid (the paper's concurrent-kernel
-launches; on TPU these become either separate ``pallas_call``s or one
-fused grid — grid steps are cheap, there is no kernel-launch cost to
-amortize, see DESIGN.md).  Geometry per trapezoid ``i``
-(offset o_i, triangle side s_i, power of two):
+* **2-simplex trapezoids** (the paper's concurrent-kernel scheme):
+  power-of-two triangles along the diagonal, each completed by the
+  rectangular box to its left.  ``decompose`` / ``trapezoid_map`` keep
+  the per-piece (w, h) grids of the original scheme — one concurrent
+  launch per piece.
 
-  data rows   y in [o_i, o_i + s_i), global row y has y+1 tiles
-  tiles       = box (s_i rows x o_i cols)  +  inclusive triangle side s_i
-  grid        = (s_i/2, (s_i + 1) + 2*o_i/1)  rows:
-                  rows [0, s_i]         -> hmap2_full triangle (zero waste)
-                  rows (s_i, s_i+2*o_i] -> box fold, 2 rows of grid per
-                                           s_i/2-wide strip (zero waste)
+* **General-m composite decomposition** (ours, DESIGN.md §4.2): for any
+  dimension m >= 2 and any side n, the strict simplex
+  ``T^m(n) = {x >= 0, sum(x) < n}`` splits exactly as
 
-This realizes Eq. 19's B1/B2 box fold row-wise; the printed Eq. 19
-constants are figure-dependent (see DESIGN.md §2) but the mechanism —
-offset delta, fold mask k from a sign bit, grid-width translation — is
-the same.  The fold mask below is literally ``k = (h1 - wy) >> 31`` used
-as a 0/1 selector, as in the paper.
+      T^m(n) = T^m(p)  ⊎  Shell^m(p, n),        p = pow2_floor(n)
+      Shell^m(p, n) = ⊎_{k=0}^{m-1}  T^k(p) ⋉ T^{m-k}(q),   q = n - p
+
+  where ``T^k(p) ⋉ T^{m-k}(q)`` is a *sheared prism*: a power-of-two
+  k-simplex prefix over the top k coordinates whose sum ``s`` shears the
+  remainder simplex's top coordinate by ``p - s``.  Every prefix is
+  power-of-two (served by ``hmap_factor``); every remainder ``T^{m-k}(q)``
+  recurses on the strictly smaller, generally non-power-of-two q.
+  Flattening the recursion yields *atomic pieces* — chains of
+  power-of-two factors — concatenated into one linear grid.  The piece
+  count is O(log^m n): at most C(log2(n) + m, m), measured e.g. 30 at
+  (m=4, n=23) and 2870 at (m=4, n=2^20-1).  Host-side construction is
+  O(pieces), never O(V); note the branchless map also decodes every
+  piece per evaluated index, so per-step map cost grows with the piece
+  count (the table kind pays one SMEM read instead — see DESIGN.md §4.2
+  for when each wins).
+
+All piece maps are branchless and dual-backend (numpy or jax tracers),
+so a composite schedule drops straight into a Pallas ``index_map`` or a
+host-side oracle, exactly like the power-of-two maps in ``core/hmap.py``.
 """
 
 from __future__ import annotations
@@ -34,20 +43,48 @@ from typing import Any, List, Tuple
 
 import numpy as np
 
-from .hmap import hmap2_full
+from .hmap import _is_jax, hmap2_full, hmap_factor, hmap_factor_grid_size
 
-__all__ = ["Trapezoid", "decompose", "trapezoid_map", "total_grid_cells"]
+__all__ = [
+    "Trapezoid",
+    "decompose",
+    "trapezoid_map",
+    "total_grid_cells",
+    "SimplexPiece",
+    "decompose_simplex",
+    "composite_grid_size",
+    "composite_map",
+]
 
 
 @dataclass(frozen=True)
 class Trapezoid:
+    """One piece of the 2-simplex concurrent-trapezoid decomposition.
+
+    A trapezoid covers data rows ``[offset, offset + side)`` of the
+    inclusive lower triangle: the power-of-two triangle of side ``side``
+    on the diagonal plus the ``side x offset`` box completing its rows to
+    the left.
+
+    Attributes:
+        offset: First data row covered; also the width of the box part.
+        side: Triangle side length (a power of two).
+        overshoot: Rows beyond n covered by a rounded-up final piece
+            (``trapezoid_map`` flags them invalid at run time).
+
+    Example:
+        >>> t = Trapezoid(offset=4, side=2, overshoot=0)
+        >>> t.grid_shape, t.grid_cells, t.data_tiles
+        ((1, 11), 11, 11)
+    """
+
     offset: int  # o_i: first data row / box width
     side: int  # s_i: triangle side (power of two)
     overshoot: int  # rows beyond n covered by the final rounded-up piece
 
     @property
     def grid_shape(self) -> Tuple[int, int]:
-        """(width, height): width s/2, height (s+1) + 2*offset.
+        """(width, height) of this piece's grid: width s/2, height (s+1) + 2*o.
 
         A side-1 trapezoid (odd-n tail) is a single data row of
         offset+1 tiles: grid (1, offset+1).
@@ -58,6 +95,7 @@ class Trapezoid:
 
     @property
     def grid_cells(self) -> int:
+        """Total grid cells launched for this piece (width * height)."""
         w, h = self.grid_shape
         return w * h
 
@@ -74,9 +112,28 @@ class Trapezoid:
 
 
 def decompose(n: int, threshold: int = 4) -> List[Trapezoid]:
-    """Paper §4.2 option 3: power-of-two pieces from below; the final
-    remainder is rounded *up* to the next power of two once it is smaller
-    than ``threshold`` (its excess rows are filtered at run time)."""
+    """Split the side-n lower triangle into concurrent trapezoids.
+
+    Paper §4.2 option 3: approach n from below with power-of-two
+    triangle pieces; once the remainder drops under ``threshold`` it is
+    rounded *up* to the next power of two (one final trapezoid whose
+    excess rows are filtered at run time).  Worst case log2(n) pieces,
+    typically ~2-4.
+
+    Args:
+        n: Side of the triangle domain (rows), n >= 1.
+        threshold: Remainder size below which the tail is rounded up
+            instead of split further.
+
+    Returns:
+        List of ``Trapezoid`` pieces covering rows [0, n) exactly.
+
+    Example:
+        >>> [(t.offset, t.side, t.overshoot) for t in decompose(6)]
+        [(0, 4, 0), (4, 2, 0)]
+        >>> [(t.offset, t.side, t.overshoot) for t in decompose(7)]
+        [(0, 4, 0), (4, 4, 1)]
+    """
     assert n >= 1
     pieces: List[Trapezoid] = []
     offset = 0
@@ -95,10 +152,28 @@ def decompose(n: int, threshold: int = 4) -> List[Trapezoid]:
 
 
 def trapezoid_map(t: Trapezoid, wx, wy) -> Tuple[Any, Any, Any]:
-    """Map grid (wx, wy) of trapezoid ``t`` to global data tile (x, y).
+    """Map grid coordinates of one trapezoid to global data tiles.
 
-    Returns (x, y, valid).  valid=0 only on overshoot rows of a rounded-up
-    final trapezoid.  Dual-backend, branchless.
+    Grid rows [0, side] walk the power-of-two triangle through
+    ``hmap2_full`` (zero waste); rows above realize Eq. 19's box fold —
+    two grid rows per side/2-wide strip, fold mask ``k = (h1 - wy) >> 31``
+    used as a 0/1 selector exactly as in the paper.  Dual-backend,
+    branchless.
+
+    Args:
+        t: The trapezoid piece (from ``decompose``).
+        wx: Grid column index/array, in [0, grid_shape[0]).
+        wy: Grid row index/array, in [0, grid_shape[1]).
+
+    Returns:
+        ``(x, y, valid)`` global tile coordinates; ``valid`` is 0 only on
+        overshoot rows of a rounded-up final trapezoid.
+
+    Example:
+        >>> t = Trapezoid(offset=4, side=2, overshoot=0)
+        >>> x, y, v = trapezoid_map(t, np.zeros(11, np.int64), np.arange(11))
+        >>> sorted(zip(y.tolist(), x.tolist()))[:5]
+        [(4, 0), (4, 1), (4, 2), (4, 3), (4, 4)]
     """
     s, o = t.side, t.offset
     h1 = s  # last triangle grid row index (rows 0..s are triangle)
@@ -128,4 +203,224 @@ def trapezoid_map(t: Trapezoid, wx, wy) -> Tuple[Any, Any, Any]:
 
 
 def total_grid_cells(n: int, threshold: int = 4) -> int:
+    """Total grid cells across all trapezoids of ``decompose(n, threshold)``.
+
+    Args:
+        n: Side of the triangle domain.
+        threshold: Passed through to ``decompose``.
+
+    Returns:
+        Sum of per-piece grid cells — the scheme's total parallel space.
+
+    Example:
+        >>> total_grid_cells(6)  # tri(6) = 21: zero waste at even n
+        21
+    """
     return sum(t.grid_cells for t in decompose(n, threshold))
+
+
+# ---------------------------------------------------------------------------
+# General-m composite decomposition (DESIGN.md §4.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimplexPiece:
+    """One atomic piece of the general-m composite decomposition.
+
+    A piece is a chain of simplex *factors* ``(dim, side, delta)``
+    occupying coordinate groups from the top coordinate ``x_{m-1}``
+    downward.  All factors except possibly the last have power-of-two
+    side (decoded by ``hmap_factor``); the last factor may be an
+    interval (dim 1) of any side.  ``delta`` is the static shear offset
+    added to the factor's top coordinate (accumulated from P_0 branches
+    of the recursion); the dynamic shear ``side - sum(z)`` of each
+    factor is applied to the next factor's top coordinate at decode time.
+
+    Attributes:
+        groups: Chain ``((dim, side, delta), ...)``; dims sum to the
+            ambient m of the decomposition that produced the piece.
+
+    Example:
+        >>> piece = SimplexPiece(((1, 2, 0), (1, 1, 0)))
+        >>> piece.grid_cells, piece.data_cells
+        (2, 2)
+    """
+
+    groups: Tuple[Tuple[int, int, int], ...]
+
+    @property
+    def grid_cells(self) -> int:
+        """Grid cells this piece launches: product of factor grid sizes."""
+        g = 1
+        for dim, side, _ in self.groups:
+            g *= hmap_factor_grid_size(side, dim)
+        return g
+
+    @property
+    def data_cells(self) -> int:
+        """Simplex cells the piece covers: product of factor volumes."""
+        import math
+
+        v = 1
+        for dim, side, _ in self.groups:
+            v *= math.comb(side + dim - 1, dim)
+        return v
+
+
+def _is_pow2(s: int) -> bool:
+    return s >= 1 and (s & (s - 1)) == 0
+
+
+def decompose_simplex(m: int, n: int) -> List[SimplexPiece]:
+    """Decompose the strict m-simplex T^m(n) into power-of-two pieces.
+
+    The recursion (module docstring; DESIGN.md §4.2): with
+    ``p = pow2_floor(n)`` and ``q = n - p``,
+
+    * the **core** T^m(p) is one piece (power of two);
+    * shell piece **P_0** is T^m(q) with its top coordinate sheared by a
+      static +p — recurse on (m, q);
+    * shell piece **P_k** (1 <= k < m) is a power-of-two k-simplex
+      prefix T^k(p) over the top k coordinates, shearing a recursive
+      T^{m-k}(q) remainder by ``p - sum(z)``.
+
+    Terminal regions (dimension 1, or power-of-two side) become single
+    factors.  The returned pieces partition T^m(n) exactly — verified
+    exhaustively in ``tests/test_composite.py``.
+
+    Args:
+        m: Simplex dimension, m >= 1.
+        n: Side length, n >= 1 (any value, not just powers of two).
+
+    Returns:
+        List of ``SimplexPiece``; total ``data_cells`` equals
+        ``simplex_volume(n, m)``.  At most C(log2(n) + m, m) pieces
+        (O(log^m n)), O(1) host work each.
+
+    Example:
+        >>> [p.groups for p in decompose_simplex(2, 3)]
+        [((2, 2, 0),), ((2, 1, 2),), ((1, 2, 0), (1, 1, 0))]
+        >>> sum(p.data_cells for p in decompose_simplex(3, 7))  # C(9,3)
+        84
+    """
+    assert m >= 1 and n >= 1
+
+    def _rec(d: int, s: int, delta: int) -> List[Tuple[Tuple[int, int, int], ...]]:
+        if d == 1 or _is_pow2(s):
+            return [((d, s, delta),)]
+        p = 1 << (s.bit_length() - 1)
+        q = s - p
+        chains = [((d, p, delta),)]  # core
+        chains += _rec(d, q, delta + p)  # P_0: static shear by p
+        for k in range(1, d):
+            for sub in _rec(d - k, q, 0):
+                chains.append(((k, p, delta),) + sub)  # P_k prefix
+        return chains
+
+    return [SimplexPiece(c) for c in _rec(m, n, 0)]
+
+
+def composite_grid_size(m: int, n: int) -> int:
+    """Total linear-grid steps of the composite schedule for T^m(n).
+
+    Pure O(pieces) arithmetic — reading the composite schedule's size
+    never enumerates the simplex.
+
+    Args:
+        m: Simplex dimension.
+        n: Side length (any n >= 1).
+
+    Returns:
+        Sum of per-piece grid cells; >= ``simplex_volume(n, m)``, with
+        equality (zero waste) whenever every factor has dim <= 2.
+
+    Example:
+        >>> composite_grid_size(2, 100)  # m=2 composite is zero-waste
+        5050
+    """
+    return sum(p.grid_cells for p in decompose_simplex(m, n))
+
+
+def _decode_piece(piece: SimplexPiece, m: int, local, xp):
+    """Decode one piece's local linear index to global strict coords."""
+    sizes = [hmap_factor_grid_size(s, d) for d, s, _ in piece.groups]
+    coords: List[Any] = [None] * m
+    valid = None
+    dyn = xp.zeros_like(local)
+    hi = m - 1
+    rem = local
+    for g, (dim, side, delta) in enumerate(piece.groups):
+        stride = 1
+        for sz in sizes[g + 1 :]:
+            stride *= sz
+        idx_g = rem // stride
+        rem = rem - idx_g * stride
+        out = hmap_factor(idx_g, side, dim)
+        cs, vg = out[:-1], out[-1]
+        valid = vg if valid is None else (valid & vg)
+        sumz = cs[0]
+        for c in cs[1:]:
+            sumz = sumz + c
+        shift = dyn + delta
+        # factor slot dim-1 is the group's top coordinate: it takes the
+        # shear; lower slots map to the next coordinate indices down.
+        for j in range(dim):
+            coords[hi - (dim - 1) + j] = cs[j] + (shift if j == dim - 1 else 0)
+        dyn = side - sumz
+        hi -= dim
+    return coords, valid
+
+
+def composite_map(pieces: List[SimplexPiece], m: int, lin):
+    """Map a composite schedule's linear grid index to simplex coords.
+
+    Pieces are concatenated in order; the index selects its piece by
+    comparison against static prefix offsets (branchless, like the level
+    decode of ``hmap_m_recursive``) and decodes the piece's factor chain.
+    Dual-backend: numpy arrays host-side, jax tracers inside Pallas
+    ``index_map``s.
+
+    Args:
+        pieces: Pieces from ``decompose_simplex(m, n)``.
+        m: Simplex dimension (sum of group dims of every piece).
+        lin: Linear grid index/array in ``[0, composite_grid_size(m, n))``.
+
+    Returns:
+        ``(x_0, ..., x_{m-1}, valid)`` in math order (strict simplex
+        convention ``sum(x) < n``); invalid steps are the dead cells of
+        dim >= 3 power-of-two factors and report coordinates pinned to
+        0 — like every other kind, coordinates stay in [0, n) even when
+        invalid, so kernels may feed them to a BlockSpec unconditionally
+        (a raw dead-cell shear would go negative).
+
+    Example:
+        >>> ps = decompose_simplex(2, 3)
+        >>> xs, ys, v = composite_map(ps, 2, np.arange(6))
+        >>> sorted(zip(xs[v].tolist(), ys[v].tolist()))
+        [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (2, 0)]
+    """
+    if _is_jax(lin):
+        import jax.numpy as jnp
+
+        xp = jnp
+        lin = jnp.asarray(lin)
+    else:
+        xp = np
+        lin = np.asarray(lin, dtype=np.int64)
+    out_coords = [xp.zeros_like(lin) for _ in range(m)]
+    out_valid = xp.zeros_like(lin, dtype=bool)
+    off = 0
+    for piece in pieces:
+        g = piece.grid_cells
+        sel = (lin >= off) & (lin < off + g)
+        local = xp.clip(lin - off, 0, g - 1)
+        cs, v = _decode_piece(piece, m, local, xp)
+        for j in range(m):
+            out_coords[j] = xp.where(sel, cs[j], out_coords[j])
+        out_valid = out_valid | (sel & v)
+        off += g
+    # dead cells of dim >= 3 factors can shear negative; pin invalid
+    # steps to the origin so coordinates honour the [0, n) contract.
+    out_coords = [xp.where(out_valid, c, 0) for c in out_coords]
+    return tuple(out_coords) + (out_valid,)

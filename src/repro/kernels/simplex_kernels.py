@@ -15,6 +15,11 @@ dimension:
   TPU-idiomatic exact form, zero waste for any n; m >= 3 kernels
   only — the 2D kernels launch a (w, h) grid); m=3 also keeps
   ``kind='octant'`` as a named alias of the recursion.
+* ``kind='composite'`` — the general-n analytical decomposition
+  (DESIGN.md §4.2): pow2 core + shell pieces in one linear grid, pure
+  index arithmetic (no prefetch payload).  This is what ``'hmap'``
+  resolves to for non-pow2 n at m >= 3, so the m >= 3 kernels serve
+  arbitrary n without the O(V) host-side table build.
 
 ``accum_md`` extends the ACCUM test to arbitrary m (the first consumer
 of the m >= 4 schedules).
@@ -50,17 +55,17 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # schedule plumbing — all kernels consume the unified SimplexSchedule
 # subsystem (core/schedule.py); resolve_kind applies the kernel-facing
-# non-pow2 fallbacks (hmap -> rb/bb for m=2, hmap/octant -> table for
-# m >= 3).
+# non-pow2 fallbacks (hmap -> rb/bb for m=2, hmap/octant -> composite
+# for m >= 3).
 # ---------------------------------------------------------------------------
 
 
 def _schedule(m: int, nb: int, kind: str) -> SimplexSchedule:
-    if m == 2 and kind == "table":
+    if m == 2 and kind in ("table", "composite"):
         raise ValueError(
-            "the 2D kernels launch a (w, h) grid; kind='table' (linear "
-            "scalar-prefetch walk) is only wired for the m >= 3 kernels — "
-            "use kind='hmap', 'rb', or 'bb'"
+            f"the 2D kernels launch a (w, h) grid; kind={kind!r} (linear "
+            "walk) is only wired for the m >= 3 kernels — use kind='hmap', "
+            "'rb', or 'bb'"
         )
     return SimplexSchedule(m, nb, resolve_kind(m, nb, kind))
 

@@ -1,0 +1,193 @@
+"""Composite (general-n) schedule invariants — DESIGN.md §4.2.
+
+The composite kind must serve *every* n at every m through analytical
+maps: exhaustive bijectivity over all non-pow2 n <= 24 at m in {2,3,4},
+kernel-facing resolution (`resolve_kind` never falls back to the O(V)
+table walk at m >= 3 anymore), bounded waste, O(pieces) host-side
+construction, and kernels consuming the composite walk unchanged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.general_m import alpha_extra_space
+from repro.core.schedule import SimplexSchedule, resolve_kind
+from repro.core.simplex import simplex_volume
+from repro.core.trapezoids import (
+    composite_grid_size,
+    composite_map,
+    decompose_simplex,
+)
+
+NON_POW2 = [n for n in range(3, 25) if n & (n - 1)]
+
+
+def _in_domain(m, coords, n):
+    if m == 2:  # (col, row) lower-triangle convention
+        return (
+            (coords[:, 0] >= 0)
+            & (coords[:, 0] <= coords[:, 1])
+            & (coords[:, 1] < n)
+        )
+    return (coords >= 0).all(axis=1) & (coords.sum(axis=1) < n)
+
+
+@pytest.mark.parametrize("m", [2, 3, 4])
+@pytest.mark.parametrize("n", NON_POW2)
+def test_composite_bijective_all_non_pow2(m, n):
+    """Exhaustive oracle: the composite walk covers Delta^m_n exactly once."""
+    sched = SimplexSchedule(m, n, "composite")
+    tab = sched.table()
+    assert tab.shape == (sched.steps, m + 1)
+    valid = tab[:, -1] == 1
+    coords = tab[valid, :-1]
+    assert _in_domain(m, coords, n).all()
+    pts = set(map(tuple, coords.tolist()))
+    assert len(pts) == len(coords) == sched.useful == simplex_volume(n, m)
+
+
+@pytest.mark.parametrize("m", [3, 4])
+@pytest.mark.parametrize("n", NON_POW2)
+def test_composite_coords_in_range_even_when_invalid(m, n):
+    """Every step's coordinates — invalid ones included — stay in [0, n).
+
+    Kernels feed schedule coordinates straight into BlockSpec index
+    maps (only axis 0 is re-routed to the trash tile), so a dead cell
+    must never report an out-of-range block index; raw dead-cell shears
+    would go negative without the origin pin in composite_map.
+    """
+    tab = SimplexSchedule(m, n, "composite").table()
+    coords = tab[:, :-1]
+    assert (coords >= 0).all() and (coords < n).all()
+
+
+@pytest.mark.parametrize("m", [3, 4])
+@pytest.mark.parametrize("n", NON_POW2)
+def test_resolve_kind_composite_not_table(m, n):
+    """ISSUE acceptance: non-pow2 n at m >= 3 resolves hmap -> composite."""
+    assert resolve_kind(m, n, "hmap") == "composite"
+    if m == 3:
+        assert resolve_kind(m, n, "octant") == "composite"
+
+
+@pytest.mark.parametrize("m", [2, 3, 4])
+@pytest.mark.parametrize("n", NON_POW2)
+def test_composite_steps_within_waste_bound(m, n):
+    """Property: composite steps <= table steps * (1 + waste bound).
+
+    The table walk is exact (steps == V); the composite may only pay the
+    recursion's asymptotic extra space plus the same 25% finite-n
+    allowance the pow2 hmap tests use.  m=2 composite is exactly zero
+    waste (every factor has dim <= 2).
+    """
+    comp = SimplexSchedule(m, n, "composite")
+    table_steps = simplex_volume(n, m)  # table kind is exact by construction
+    bound = 0.0 if m == 2 else alpha_extra_space(m, 2, m)
+    assert comp.steps <= table_steps * (1.0 + bound + 0.25)
+    assert comp.waste() <= bound + 0.25
+    if m == 2:
+        assert comp.steps == table_steps  # zero waste, any n
+
+
+@pytest.mark.parametrize("m", [2, 3, 4])
+def test_composite_construction_is_o_pieces_not_o_v(m):
+    """Host-side cost scales with the piece count, never with V.
+
+    Piece count is polylog in n — bounded by C(bits + m, m) = O(log^m n)
+    — so at n = 2^20 - 1 (V ~ 10^17 at m=3) construction and
+    .steps/.waste() must still be instant and table-free.
+    """
+    import math
+
+    n = (1 << 20) - 1
+    pieces = decompose_simplex(m, n)
+    assert len(pieces) <= math.comb(n.bit_length() + m, m)
+    sched = SimplexSchedule(m, n, "composite")
+    assert sched.steps == composite_grid_size(m, n) >= sched.useful
+    assert sched.prefetch is None  # pure arithmetic map, no O(V) payload
+    assert sched.waste() >= 0.0
+
+
+@pytest.mark.parametrize("m,n", [(2, 6), (3, 6), (3, 12), (4, 6)])
+def test_composite_map_dual_backend(m, n):
+    """The jax-traced composite map is bit-equal to the numpy walk."""
+    import jax.numpy as jnp
+
+    sched = SimplexSchedule(m, n, "composite")
+    want = sched.table()
+    lin = jnp.arange(sched.steps, dtype=jnp.int32)
+    out = sched.map(lin)
+    got = np.stack(
+        [np.asarray(c, dtype=np.int64) for c in out[:-1]]
+        + [np.asarray(out[-1]).astype(np.int64)],
+        axis=1,
+    )
+    assert np.array_equal(got, want.astype(np.int64))
+
+
+def test_decompose_simplex_partitions_exactly():
+    """Piece volumes sum to V and pieces have pow2 factor sides."""
+    for m in (2, 3, 4, 5):
+        for n in (3, 7, 11, 24):
+            pieces = decompose_simplex(m, n)
+            assert sum(p.data_cells for p in pieces) == simplex_volume(n, m)
+            for piece in pieces:
+                dims = sum(d for d, _, _ in piece.groups)
+                assert dims == m
+                for d, s, _ in piece.groups[:-1]:  # prefixes are pow2
+                    assert d >= 1 and s >= 1 and (s & (s - 1)) == 0
+
+
+def test_composite_pow2_collapses_to_single_hmap_piece():
+    """At pow2 n the decomposition is the plain recursion (one piece)."""
+    for m in (2, 3, 4):
+        pieces = decompose_simplex(m, 16)
+        assert len(pieces) == 1 and pieces[0].groups == ((m, 16, 0),)
+
+
+@pytest.mark.parametrize("kind", ["hmap", "composite"])
+def test_accum3d_composite_non_pow2(kind):
+    """accum3d consumes the composite walk unchanged at non-pow2 nb."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import simplex_kernels as K
+
+    n, rho = 12, 2  # nb = 6: hmap resolves to composite
+    x = jax.random.randint(jax.random.PRNGKey(0), (n,) * 3, 0, 9).astype(
+        jnp.int32
+    )
+    got = np.asarray(K.accum3d(x, rho=rho, kind=kind))
+    mask = np.indices((n,) * 3).sum(0) < n
+    assert np.array_equal(got[mask], np.asarray(x)[mask] + 1)
+    assert np.array_equal(got[~mask], np.asarray(x)[~mask])
+
+
+def test_accum_md_composite_non_pow2_m4():
+    """accum_md at m=4 on a non-pow2 block count goes through composite."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import simplex_kernels as K
+
+    n, rho = 6, 1
+    x = jax.random.randint(jax.random.PRNGKey(1), (n,) * 4, 0, 9).astype(
+        jnp.int32
+    )
+    got = np.asarray(K.accum_md(x, rho=rho, kind="hmap"))
+    mask = np.indices((n,) * 4).sum(0) < n
+    assert np.array_equal(got[mask], np.asarray(x)[mask] + 1)
+    assert np.array_equal(got[~mask], np.asarray(x)[~mask])
+
+
+def test_composite_map_helper_roundtrip():
+    """Direct composite_map use (strict coords) covers T^m(n) once."""
+    m, n = 3, 10
+    pieces = decompose_simplex(m, n)
+    total = composite_grid_size(m, n)
+    out = composite_map(pieces, m, np.arange(total))
+    coords = np.stack([np.asarray(c) for c in out[:-1]], axis=1)
+    v = np.asarray(out[-1])
+    pts = coords[v]
+    assert (pts >= 0).all() and (pts.sum(axis=1) < n).all()
+    assert len(set(map(tuple, pts.tolist()))) == len(pts) == simplex_volume(n, m)

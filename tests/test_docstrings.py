@@ -1,0 +1,23 @@
+"""Doctest gate for the documented core scheduling API.
+
+The docstring satellite of ISSUE 2: every public symbol of
+``core/schedule.py`` and ``core/trapezoids.py`` carries a doctest-style
+example; running them here keeps the examples truthful (the ruff D1xx
+gate in pyproject.toml keeps the *coverage* from regressing, this test
+keeps the *content* from rotting).
+"""
+
+import doctest
+
+import repro.core.schedule
+import repro.core.trapezoids
+
+
+def test_schedule_doctests():
+    result = doctest.testmod(repro.core.schedule, verbose=False)
+    assert result.failed == 0 and result.attempted > 0
+
+
+def test_trapezoids_doctests():
+    result = doctest.testmod(repro.core.trapezoids, verbose=False)
+    assert result.failed == 0 and result.attempted > 0

@@ -106,9 +106,11 @@ def test_m4_hmap_bijective_and_bounded():
 
 
 def test_registered_kinds_per_dimension():
-    assert set(registered_kinds(2)) == {"hmap", "rb", "bb", "table"}
-    assert set(registered_kinds(3)) == {"hmap", "octant", "bb", "table"}
-    assert set(registered_kinds(4)) == {"hmap", "bb", "table"}
+    assert set(registered_kinds(2)) == {"hmap", "rb", "bb", "table", "composite"}
+    assert set(registered_kinds(3)) == {
+        "hmap", "octant", "bb", "table", "composite",
+    }
+    assert set(registered_kinds(4)) == {"hmap", "bb", "table", "composite"}
     with pytest.raises(ValueError):
         SimplexSchedule(2, 8, "octant")
     with pytest.raises(ValueError):
@@ -117,14 +119,19 @@ def test_registered_kinds_per_dimension():
 
 def test_resolve_kind_fallbacks():
     # m=2: non-pow2 hmap -> rb (even) or bb (odd); odd rb -> bb
+    # (the 2D kernels need a (w, h) grid, so m=2 keeps the single-map
+    # fallbacks; the linear-grid composite kind serves m=2 analysis)
     assert resolve_kind(2, 6, "hmap") == "rb"
     assert resolve_kind(2, 7, "hmap") == "bb"
     assert resolve_kind(2, 7, "rb") == "bb"
     assert resolve_kind(2, 8, "hmap") == "hmap"
-    # m>=3: non-pow2 recursion -> exact table walk
-    assert resolve_kind(3, 6, "octant") == "table"
-    assert resolve_kind(4, 10, "hmap") == "table"
+    # m>=3: non-pow2 recursion -> the general-n composite decomposition
+    assert resolve_kind(3, 6, "octant") == "composite"
+    assert resolve_kind(4, 10, "hmap") == "composite"
     assert resolve_kind(4, 16, "hmap") == "hmap"
+    # explicit exact kinds pass through untouched
+    assert resolve_kind(3, 6, "table") == "table"
+    assert resolve_kind(4, 10, "composite") == "composite"
 
 
 def test_grid_steps_delegates_across_dimensions():
