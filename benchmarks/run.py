@@ -15,6 +15,7 @@ EXPERIMENTS.md §Roofline), not from this harness.
 
 from __future__ import annotations
 
+import argparse
 import json
 import math
 import os
@@ -83,10 +84,91 @@ def _composite_rows():
     return rows
 
 
+def _compiled_rows(quick: bool = False):
+    """Compiled-execution section: ``compiled: true`` rows for ACCUM
+    (m=2, n=256) and ACCUM3D.  The launched kind is autotuner-selected
+    (``repro.autotune.choose_kind`` — the harness never hand-picks a
+    schedule, the winner row carries ``autotune_source``), and every
+    *candidate* kind is additionally timed and recorded so the tuner's
+    measured ranking has symmetric evidence on the next run (it only
+    trusts measurements that cover all candidates).  On this host
+    "compiled" means the fused-XLA executors of ``kernels/compiled.py``
+    (one jit program for the whole schedule walk); on TPU/GPU the same
+    entry points lower as non-interpret Pallas.  Each output is
+    parity-checked against the pure-numpy truth before its row is
+    recorded — a wrong compiled walk aborts the run."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.autotune import candidate_kinds, choose_kind
+    from repro.core.schedule import SimplexSchedule
+    from repro.kernels.compiled import accum2d_compiled, accum3d_compiled
+    from repro.kernels.policy import backend_name
+
+    backend = backend_name()
+    reps = 3 if quick else 10
+    rows = []
+
+    def _timed(f, *args):
+        out = jax.block_until_ready(f(*args))  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = jax.block_until_ready(f(*args))
+        return out, (time.perf_counter() - t0) / reps * 1e6
+
+    def _section(test, m, n, rho, runner, x, want):
+        decision = choose_kind(m, n // rho, backend=backend)
+        for kind in candidate_kinds(m, n // rho):
+            out, us = _timed(runner, x, rho, kind)
+            if not np.array_equal(np.asarray(out), want):
+                raise SystemExit(f"compiled {test} parity FAILED ({kind})")
+            sched = SimplexSchedule(m, n // rho, kind)
+            row = {
+                "test": test, "map": kind, "m": m, "n": n, "rho": rho,
+                "grid_steps": sched.steps, "waste": sched.waste(),
+                "us_per_call": us, "compiled": True,
+            }
+            if kind == decision.kind:
+                row["autotune_source"] = decision.source
+            rows.append(row)
+
+    # -- ACCUM, m=2, n=256 --------------------------------------------
+    n2, rho2 = 256, 16
+    x2 = jax.random.randint(jax.random.PRNGKey(0), (n2, n2), 0, 100)
+    x2 = x2.astype(jnp.int32)
+    want2 = np.asarray(x2) + np.tri(n2, dtype=np.int32)
+    _section("ACCUM", 2, n2, rho2, accum2d_compiled, x2, want2)
+
+    # -- ACCUM3D ------------------------------------------------------
+    n3, rho3 = (32, 4) if quick else (64, 4)
+    x3 = jax.random.randint(jax.random.PRNGKey(1), (n3,) * 3, 0, 50)
+    x3 = x3.astype(jnp.int32)
+    ii = np.arange(n3)
+    simplex = (
+        ii[:, None, None] + ii[None, :, None] + ii[None, None, :]
+    ) < n3
+    want3 = np.asarray(x3) + simplex.astype(np.int32)
+    _section("ACCUM3D", 3, n3, rho3, accum3d_compiled, x3, want3)
+    return rows
+
+
 def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
-    """Persist steps/waste/wall-time per (kind, m, n) for perf tracking."""
+    """Persist steps/waste/wall-time per (kind, m, n) for perf tracking.
+
+    Schema bench-maps/v2: every row additionally records the backend it
+    ran on, the JAX version, and whether it went down the compiled path
+    (fused-XLA / non-interpret Pallas) or the interpret emulator — so
+    the autotuner and future-PR perf diffs never mix the two regimes.
+    """
+    import jax
+
+    from repro.kernels.policy import backend_name
+
+    backend = backend_name()
+    jax_version = jax.__version__
     artifact = {
-        "schema": "bench-maps/v1",
+        "schema": "bench-maps/v2",
         "rows": [
             {
                 "test": r.get("test"),
@@ -102,6 +184,14 @@ def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
                         and math.isnan(r["us_per_call"]))
                     else r["us_per_call"]
                 ),
+                "backend": backend,
+                "jax_version": jax_version,
+                "compiled": bool(r.get("compiled", False)),
+                **(
+                    {"autotune_source": r["autotune_source"]}
+                    if "autotune_source" in r
+                    else {}
+                ),
             }
             for r in rows
             if "grid_steps" in r
@@ -112,7 +202,56 @@ def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
     return os.path.abspath(path)
 
 
-def main() -> None:
+def validate_artifact(path: str) -> None:
+    """Fail (SystemExit) unless the artifact is well-formed v2 with at
+    least one compiled row — the schema gate the CI smoke job runs."""
+    with open(path) as f:
+        artifact = json.load(f)
+    if artifact.get("schema") != "bench-maps/v2":
+        raise SystemExit(f"bad schema: {artifact.get('schema')!r}")
+    rows = artifact.get("rows", [])
+    required = ("test", "map", "m", "n", "grid_steps", "backend",
+                "jax_version", "compiled")
+    for r in rows:
+        missing = [k for k in required if k not in r]
+        if missing:
+            raise SystemExit(f"row missing {missing}: {r}")
+    if not any(r["compiled"] for r in rows):
+        raise SystemExit("no compiled rows in artifact")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI smoke mode: compiled rows + schedule builds only "
+             "(skips the interpret-mode kernel sweeps), then validates "
+             "the written artifact",
+    )
+    ap.add_argument(
+        "--out", default=None,
+        help="artifact path (default BENCH_maps.json; "
+             "BENCH_maps.quick.json under --quick)",
+    )
+    ns = ap.parse_args(argv)
+    out = ns.out or ("BENCH_maps.quick.json" if ns.quick else
+                     "BENCH_maps.json")
+
+    t0 = time.time()
+    if ns.quick:
+        print("# ==== compiled execution (autotuned kinds) ====")
+        rcomp = _compiled_rows(quick=True)
+        for r in rcomp:
+            print(f"{r['test']},{r['map']},{r['grid_steps']},"
+                  f"{r['us_per_call']:.0f},src={r.get('autotune_source', '-')}")
+        print("# ==== §4.2: composite vs table (host build) ====")
+        rc = _composite_rows()
+        path = write_maps_artifact(rcomp + rc, path=out)
+        validate_artifact(path)
+        print(f"# wrote + validated {path}")
+        print(f"# total {time.time()-t0:.0f}s")
+        return
+
     from . import (
         bench_attention,
         bench_energy,
@@ -121,7 +260,6 @@ def main() -> None:
         bench_maps_3simplex,
     )
 
-    t0 = time.time()
     print("# ==== Fig.10: 2-simplex maps ====")
     r2 = bench_maps_2simplex.main()
     print("# ==== Fig.13: 3-simplex maps ====")
@@ -136,6 +274,11 @@ def main() -> None:
     for r in rc:
         print(f"{r['test']},{r['map']},n={r['n']},{r['grid_steps']},"
               f"{r['waste']:.3f},build_us={r['us_per_call']:.0f}")
+    print("# ==== compiled execution (autotuned kinds) ====")
+    rcomp = _compiled_rows()
+    for r in rcomp:
+        print(f"{r['test']},{r['map']},{r['grid_steps']},"
+              f"{r['us_per_call']:.0f},src={r.get('autotune_source', '-')}")
     print("# ==== Fig.12/15: energy (modeled) ====")
     re = bench_energy.main()
     print("# ==== §6: general-m (r,beta) ====")
@@ -143,8 +286,9 @@ def main() -> None:
     print("# ==== beyond-paper: folded causal attention ====")
     ra = bench_attention.main()
 
-    path = write_maps_artifact(r2 + r3 + rm + rc)
-    print(f"# wrote {path}")
+    path = write_maps_artifact(r2 + r3 + rm + rc + rcomp, path=out)
+    validate_artifact(path)
+    print(f"# wrote + validated {path}")
 
     print("# ==== summary: name,us_per_call,derived ====")
     for r in r2:
@@ -161,6 +305,9 @@ def main() -> None:
     for r in rc:
         print(f"sched/{r['test']}/{r['map']}/n={r['n']},"
               f"{r['us_per_call']:.0f},waste={r['waste']:.3f}")
+    for r in rcomp:
+        print(f"compiled/{r['test']}/{r['map']},{r['us_per_call']:.0f},"
+              f"autotune={r.get('autotune_source', '-')}")
     for r in re:
         print(f"fig12/{r['test']}/{r['map']},0,"
               f"eps_per_w_vs_bb={r['eps_per_w_vs_bb']:.2f}")

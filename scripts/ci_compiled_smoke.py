@@ -1,0 +1,64 @@
+"""CI smoke for the compiled execution path (DESIGN.md §5).
+
+Runs one compiled ``accum_md`` configuration end to end — autotuner
+decision, fused-XLA executor, numpy parity — and checks the compiled
+index_map against the host-built step list for one schedule of every
+registered kind.  Exits non-zero on any parity failure; the workflow
+then runs ``benchmarks/run.py --quick`` for the schema gate.
+
+Usage:  PYTHONPATH=src python scripts/ci_compiled_smoke.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+
+def main() -> int:
+    os.environ.setdefault("REPRO_AUTOTUNE_DISABLE", "1")  # hermetic
+    import jax.numpy as jnp
+
+    from repro.autotune import choose_kind
+    from repro.core.schedule import SimplexSchedule, registered_kinds
+    from repro.kernels.compiled import (
+        accum_md_compiled,
+        schedule_coords_compiled,
+    )
+
+    # -- one compiled accum_md config, autotuned kind -----------------
+    m, n, rho = 3, 32, 4
+    decision = choose_kind(m, n // rho)
+    x = (np.arange(n**m, dtype=np.int32).reshape((n,) * m)) % 41
+    got = np.asarray(
+        accum_md_compiled(jnp.asarray(x), rho=rho, kind=decision.kind)
+    )
+    ii = np.arange(n)
+    inside = (
+        ii[:, None, None] + ii[None, :, None] + ii[None, None, :]
+    ) < n
+    want = x + inside.astype(np.int32)
+    if not np.array_equal(got, want):
+        print(f"FAIL: compiled accum_md parity (kind={decision.kind})")
+        return 1
+    print(f"ok: compiled accum_md m={m} n={n} kind={decision.kind} "
+          f"(source={decision.source})")
+
+    # -- compiled index_map == host step list, every kind -------------
+    probe = {"hmap": (3, 8), "octant": (3, 8), "rb": (2, 8),
+             "bb": (3, 6), "table": (3, 6), "composite": (3, 6)}
+    for kind, (pm, pn) in probe.items():
+        if kind not in registered_kinds(pm):
+            continue
+        coords = schedule_coords_compiled(pm, pn, kind)
+        table = np.asarray(SimplexSchedule(pm, pn, kind).table())
+        if not np.array_equal(coords.astype(np.int64),
+                              table.astype(np.int64)):
+            print(f"FAIL: index_map parity kind={kind} (m={pm}, n={pn})")
+            return 1
+        print(f"ok: index_map parity kind={kind} ({len(table)} steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

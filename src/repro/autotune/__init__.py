@@ -1,0 +1,23 @@
+"""Cached (m, n, backend) schedule autotuner — see ``tuner`` module."""
+
+from .tuner import (
+    CACHE_SCHEMA,
+    Decision,
+    bench_artifact_path,
+    cache_path,
+    candidate_kinds,
+    choose_kind,
+    clear_cache,
+    should_split_pieces,
+)
+
+__all__ = [
+    "CACHE_SCHEMA",
+    "Decision",
+    "bench_artifact_path",
+    "cache_path",
+    "candidate_kinds",
+    "choose_kind",
+    "clear_cache",
+    "should_split_pieces",
+]

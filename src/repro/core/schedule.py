@@ -52,7 +52,7 @@ import numpy as np
 from . import hmap as H
 from .general_m import alpha_extra_space, best_r_beta
 from .simplex import enumerate_simplex, simplex_volume, tet, tri
-from .trapezoids import composite_map, decompose_simplex
+from .trapezoids import composite_map, decompose_simplex, piece_map
 
 __all__ = [
     "SimplexSchedule",
@@ -138,7 +138,7 @@ def registered_kinds(m: int) -> Tuple[str, ...]:
     return tuple(sorted(kinds))
 
 
-def resolve_kind(m: int, n: int, kind: str) -> str:
+def resolve_kind(m: int, n: int, kind: str, backend: Optional[str] = None) -> str:
     """Kernel-facing kind resolution (the §4.1 power-of-two constraint).
 
     'hmap' requires a power-of-two tile count.  For non-pow2 n the
@@ -149,10 +149,17 @@ def resolve_kind(m: int, n: int, kind: str) -> str:
     (exact for any even n) or BB (odd n); the m=2 composite kind exists
     for linear-grid consumers and analysis.
 
+    ``kind='auto'`` delegates to the ``repro.autotune`` subsystem
+    (DESIGN.md §5): the schedule is picked per (m, n, backend) from the
+    roofline cost model plus any recorded ``BENCH_maps.json``
+    measurements, and the decision is cached on disk — kernels and
+    benchmarks never hand-pick a schedule.
+
     Args:
         m: Simplex dimension of the kernel's domain.
         n: Tile count per side (the kernel-facing problem size).
-        kind: Requested schedule kind.
+        kind: Requested schedule kind, or ``'auto'``.
+        backend: Backend name for autotuned resolution (None = active).
 
     Returns:
         The kind actually constructible at this (m, n) — ``kind`` itself
@@ -164,6 +171,10 @@ def resolve_kind(m: int, n: int, kind: str) -> str:
         >>> resolve_kind(4, 16, "hmap"), resolve_kind(2, 6, "hmap")
         ('hmap', 'rb')
     """
+    if kind == "auto":
+        from repro.autotune import choose_kind
+
+        kind = choose_kind(m, n, backend=backend).kind
     pow2 = n >= 2 and (n & (n - 1)) == 0
     if m == 2:
         if kind == "hmap" and not pow2:
@@ -320,10 +331,75 @@ class SimplexSchedule:
         cols.append(np.asarray(valid).astype(np.int64))
         return np.stack(cols, axis=1).astype(np.int32)
 
+    # -- per-piece launch splitting (composite only) -----------------------
+
+    def split_pieces(self) -> Tuple["object", ...]:
+        """Per-piece sub-schedules of a composite walk.
+
+        A composite schedule's branchless map decodes every piece per
+        evaluated index (O(pieces) selects per grid step).  Splitting
+        returns one lightweight schedule per piece — same ``.grid`` /
+        ``.steps`` / ``.map`` surface, each map decoding only its own
+        factor chain — so a kernel can launch one ``pallas_call`` per
+        piece when the select chain would dominate
+        (``repro.autotune.should_split_pieces`` is the heuristic).
+
+        Returns:
+            Tuple of per-piece schedules for ``kind='composite'``;
+            ``(self,)`` for every other kind (nothing to split).
+
+        Example:
+            >>> subs = SimplexSchedule(3, 6, "composite").split_pieces()
+            >>> sum(s.steps for s in subs)
+            72
+        """
+        if self.kind != "composite":
+            return (self,)
+        pieces = decompose_simplex(self.m, self.n)
+        return tuple(
+            _PieceSchedule(self.m, self.n, p, i) for i, p in enumerate(pieces)
+        )
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (
             f"SimplexSchedule(m={self.m}, n={self.n}, kind={self.kind!r}, "
             f"grid={self.grid}, steps={self.steps}, useful={self.useful})"
+        )
+
+
+class _PieceSchedule:
+    """One piece of a split composite schedule (see ``split_pieces``).
+
+    Exposes the subset of the ``SimplexSchedule`` surface kernels
+    consume for linear walks: ``.grid``, ``.steps``, ``.useful``,
+    ``.map`` (piece-local linear index -> global coords + valid) and a
+    ``.prefetch`` that is always None (pure index arithmetic).
+    """
+
+    kind = "composite-piece"
+
+    def __init__(self, m: int, n: int, piece, index: int):
+        self.m = m
+        self.n = n
+        self.piece = piece
+        self.index = index
+        self.grid = (piece.grid_cells,)
+        self.steps = piece.grid_cells
+        self.useful = piece.data_cells
+        self.prefetch = None
+
+    def map(self, lin):
+        """Piece-local linear index -> ``(*coords, valid)`` (global)."""
+        out = piece_map(self.piece, self.m, lin)
+        if self.m != 2:
+            return out
+        u, v, ok = out
+        return u, (self.n - 1) - v, ok  # match the m=2 composite flip
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"_PieceSchedule(m={self.m}, n={self.n}, piece={self.index}, "
+            f"steps={self.steps})"
         )
 
 

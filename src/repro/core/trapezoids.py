@@ -54,6 +54,7 @@ __all__ = [
     "decompose_simplex",
     "composite_grid_size",
     "composite_map",
+    "piece_map",
 ]
 
 
@@ -370,6 +371,43 @@ def _decode_piece(piece: SimplexPiece, m: int, local, xp):
         dyn = side - sumz
         hi -= dim
     return coords, valid
+
+
+def piece_map(piece: SimplexPiece, m: int, lin):
+    """Decode ONE piece's local grid index — no O(pieces) select chain.
+
+    The composite ``composite_map`` decodes every piece per evaluated
+    index (branchless selects); when a schedule is *split* into one
+    launch per piece (``SimplexSchedule.split_pieces``), each launch
+    decodes only its own factor chain — O(factors) work per step
+    regardless of how many pieces the decomposition produced.
+
+    Args:
+        piece: One piece from ``decompose_simplex(m, n)``.
+        m: Simplex dimension (sum of the piece's group dims).
+        lin: Local linear index/array in ``[0, piece.grid_cells)``.
+
+    Returns:
+        ``(x_0, ..., x_{m-1}, valid)`` with the same conventions as
+        ``composite_map`` (invalid steps pinned to the origin).
+
+    Example:
+        >>> ps = decompose_simplex(2, 3)
+        >>> xs, ys, v = piece_map(ps[0], 2, np.arange(ps[0].grid_cells))
+        >>> sorted(zip(xs[v].tolist(), ys[v].tolist()))
+        [(0, 0), (0, 1), (1, 0)]
+    """
+    if _is_jax(lin):
+        import jax.numpy as jnp
+
+        xp = jnp
+        lin = jnp.asarray(lin)
+    else:
+        xp = np
+        lin = np.asarray(lin, dtype=np.int64)
+    cs, v = _decode_piece(piece, m, lin, xp)
+    cs = [xp.where(v, c, 0) for c in cs]
+    return tuple(cs) + (v,)
 
 
 def composite_map(pieces: List[SimplexPiece], m: int, lin):

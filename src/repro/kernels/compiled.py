@@ -1,0 +1,218 @@
+"""Fused-XLA compiled execution of simplex schedules (DESIGN.md §5).
+
+Interpret-mode Pallas runs a Python loop per grid step — the numbers it
+produces measure the emulator, not the hardware.  On TPU/GPU the fix is
+``interpret=False`` (the schedule map compiles as a real
+``BlockSpec.index_map``); on hosts whose Pallas backend can only
+interpret (CPU: "Only interpret mode is supported on CPU backend"), the
+compiled counterpart lives here: the *entire* schedule walk — the same
+branchless index arithmetic the index_map uses — is traced into ONE
+``jax.jit`` program (vectorized over every grid step) and executed as a
+fused gather/mask/scatter.  Same schedule, same arithmetic, zero
+per-step host round-trips.
+
+Two surfaces:
+
+* ``schedule_coords_compiled(m, n, kind)`` — the compiled index_map
+  itself, evaluated for every grid step in one XLA program; bit-equal
+  to ``SimplexSchedule.table()`` (the host-built step list).  This is
+  the compiled/interpret parity object tests assert on.
+* ``accum2d_compiled`` / ``accum3d_compiled`` / ``accum_md_compiled`` —
+  compiled executors for the ACCUM tests, numerically identical to the
+  interpret-mode kernels in ``simplex_kernels.py``.  Jitted programs
+  are cached per (shape, dtype, rho, kind).
+
+Scatter note: every registered schedule visits each data tile at most
+once over its *valid* steps, and invalid steps contribute a zero update,
+so the scatter-add form is exact (no double updates).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import SimplexSchedule, resolve_kind
+
+__all__ = [
+    "schedule_coords_compiled",
+    "accum2d_compiled",
+    "accum3d_compiled",
+    "accum_md_compiled",
+]
+
+
+def _grid_unflatten(sched: SimplexSchedule, lin):
+    """lin -> one index array per grid axis (axis 0 fastest), as .table()."""
+    ws = []
+    for g in sched.grid:
+        ws.append(lin % g)
+        lin = lin // g
+    return ws
+
+
+def schedule_coords_compiled(m: int, n: int, kind: str) -> np.ndarray:
+    """Evaluate a schedule's map for every grid step in ONE jit program.
+
+    The map runs exactly as a compiled ``BlockSpec.index_map`` would —
+    traced jnp arithmetic, no host interpreter — vectorized over
+    ``arange(steps)``.  Table-driven kinds receive their prefetch
+    payload as a device array, mirroring the SMEM scalar-prefetch read.
+
+    Args:
+        m: Simplex dimension.
+        n: Side length in tile units.
+        kind: Exact registered kind (no ``'auto'``; construct what you
+            assert on).
+
+    Returns:
+        ``(steps, m+1)`` int32 array ``(*coords, valid)`` — comparable
+        bit-for-bit with ``SimplexSchedule.table()``.
+    """
+    sched = SimplexSchedule(m, n, kind)
+    steps = sched.steps
+    table = sched.prefetch
+
+    @jax.jit
+    def run(tab):
+        lin = jnp.arange(steps, dtype=jnp.int32)
+        ws = _grid_unflatten(sched, lin)
+        args = tuple(ws) + ((tab,) if tab is not None else ())
+        out = sched.map(*args)
+        coords, valid = out[:-1], out[-1]
+        cols = [jnp.asarray(c).astype(jnp.int32) for c in coords]
+        cols.append(jnp.asarray(valid).astype(jnp.int32))
+        return jnp.stack(cols, axis=1)
+
+    return np.asarray(run(None if table is None else jnp.asarray(table)))
+
+
+def _resolve_2d_kind(nb: int, kind: str) -> str:
+    kind = resolve_kind(2, nb, kind)
+    if kind in ("table", "composite"):
+        raise ValueError(
+            f"accum2d_compiled uses the (w, h)-grid kinds; got {kind!r}"
+        )
+    return kind
+
+
+@functools.lru_cache(maxsize=64)
+def _accum2d_program(n: int, rho: int, kind: str, dtype_name: str):
+    nb = n // rho
+    sched = SimplexSchedule(2, nb, _resolve_2d_kind(nb, kind))
+    steps = sched.steps
+
+    @jax.jit
+    def run(x):
+        lin = jnp.arange(steps, dtype=jnp.int32)
+        ws = _grid_unflatten(sched, lin)
+        xb, yb, valid = sched.map(*ws)
+        # (steps, rho, rho) element coordinates of each visited tile
+        rr = jax.lax.broadcasted_iota(jnp.int32, (steps, rho, rho), 1)
+        cc = jax.lax.broadcasted_iota(jnp.int32, (steps, rho, rho), 2)
+        rows = yb.astype(jnp.int32)[:, None, None] * rho + rr
+        cols = xb.astype(jnp.int32)[:, None, None] * rho + cc
+        tri = (cols <= rows) & valid[:, None, None]
+        upd = tri.astype(x.dtype)
+        return x.at[rows, cols].add(upd, mode="drop")
+
+    return run
+
+
+def accum2d_compiled(x: jax.Array, rho: int = 8, kind: str = "auto"):
+    """Compiled ACCUM on the 2-simplex: one fused XLA program.
+
+    Numerically identical to ``simplex_kernels.accum2d`` (untouched
+    tiles keep their input value).  ``kind='auto'`` resolves through the
+    autotuner, like the Pallas kernels.
+
+    Args:
+        x: (n, n) array, ``rho | n``.
+        rho: Square tile side.
+        kind: Schedule kind (``hmap``/``rb``/``bb``/``auto``).
+
+    Returns:
+        x with +1 on the inclusive lower triangle.
+    """
+    n = x.shape[0]
+    assert x.shape == (n, n) and n % rho == 0
+    return _accum2d_program(n, rho, kind, jnp.asarray(x).dtype.name)(x)
+
+
+@functools.lru_cache(maxsize=64)
+def _accum_md_program(m: int, n: int, rho: int, kind: str, dtype_name: str):
+    nb = n // rho
+    sched = SimplexSchedule(m, nb, resolve_kind(m, nb, kind))
+    steps = sched.steps
+    table = sched.prefetch
+    tile = (rho,) * m
+
+    @jax.jit
+    def run(x, tab):
+        lin = jnp.arange(steps, dtype=jnp.int32)
+        args = (lin,) + ((tab,) if tab is not None else ())
+        out = sched.map(*args)
+        coords, valid = out[:-1], out[-1]
+        blocks = tuple(coords[::-1])  # array axis j holds x_{m-1-j}
+        shape = (steps,) + tile
+        idx = []
+        gsum = jnp.zeros(shape, jnp.int32)
+        for ax in range(m):
+            g = blocks[ax].astype(jnp.int32).reshape(
+                (steps,) + (1,) * m
+            ) * rho + jax.lax.broadcasted_iota(jnp.int32, shape, ax + 1)
+            idx.append(g)
+            gsum = gsum + g
+        mask = (gsum < n) & valid.reshape((steps,) + (1,) * m)
+        upd = mask.astype(x.dtype)
+        return x.at[tuple(idx)].add(upd, mode="drop")
+
+    return run, None if table is None else jnp.asarray(table)
+
+
+def accum_md_compiled(x: jax.Array, rho: int = 2, kind: str = "auto"):
+    """Compiled general-m ACCUM (m = x.ndim >= 3): one fused XLA program.
+
+    The schedule's linear walk — including the composite piece decode or
+    the recursion's level decode — is traced once over all grid steps
+    and lowered by XLA; table kinds read their payload from a device
+    array.  Matches ``simplex_kernels.accum_md`` exactly.
+
+    Args:
+        x: (n,)*m array, ``rho | n``.
+        rho: Cubic tile side.
+        kind: Schedule kind or ``'auto'``.
+
+    Returns:
+        x with +1 on T(n) = {sum(coords) < n}.
+    """
+    m = x.ndim
+    assert m >= 3, "use accum2d_compiled for the 2-simplex"
+    n = x.shape[0]
+    assert all(s == n for s in x.shape) and n % rho == 0
+    run, table = _accum_md_program(m, n, rho, kind, jnp.asarray(x).dtype.name)
+    return run(x, table)
+
+
+def accum3d_compiled(x: jax.Array, rho: int = 4, kind: str = "auto"):
+    """Compiled ACCUM3D — the m=3 instance of ``accum_md_compiled``.
+
+    Args:
+        x: (n, n, n) array with axes (z, y, x), ``rho | n``.
+        rho: Cubic tile side.
+        kind: Schedule kind or ``'auto'``.
+
+    Returns:
+        x with +1 on T(n) = {x+y+z < n}.
+    """
+    assert x.ndim == 3
+    return accum_md_compiled(x, rho=rho, kind=kind)
+
+
+def compiled_grid_shape(m: int, n: int, kind: str) -> Tuple[int, ...]:
+    """Grid of the schedule a compiled executor would launch (inspection)."""
+    return SimplexSchedule(m, n, resolve_kind(m, n, kind)).grid

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .policy import check_tile_alignment, resolve_interpret
+
 NEG_INF = -1e30
 
 __all__ = ["flash_attention", "flash_grid_steps"]
@@ -66,13 +68,16 @@ def flash_attention(
     block_q: int = 128,
     block_kv: int = 128,
     scale: float | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Causal self-attention, GQA-aware.
 
     q: (B, Hq, S, D); k, v: (B, Hkv, S, D), Hq % Hkv == 0, S % block == 0.
     Returns (B, Hq, S, D) in q.dtype.  f32 softmax accumulation.
+    ``interpret=None`` resolves through ``policy.default_interpret()``
+    (compiled on TPU/GPU, interpreter on CPU).
     """
+    interpret = resolve_interpret(interpret)
     b, hq, s, d = q.shape
     hkv = k.shape[1]
     assert hq % hkv == 0 and k.shape == v.shape == (b, hkv, s, d)
@@ -169,6 +174,7 @@ def flash_attention(
             l = jnp.where(l == 0.0, 1.0, l)
             o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
+    check_tile_alignment((block_q, d), interpret, what="q block")
     qr = q.reshape(b * hq, s, d)
     kr = k.reshape(b * hkv, s, d)
     vr = v.reshape(b * hkv, s, d)

@@ -30,18 +30,22 @@ from jax.experimental import pallas as pl
 
 from repro.core.hmap import pow2_floor
 
+from .policy import resolve_interpret
+
 __all__ = ["hmap2_coords_mxu"]
 
 
 def hmap2_coords_mxu(
-    wxy: jax.Array, rho: int = 1, interpret: bool = True
+    wxy: jax.Array, rho: int = 1, interpret: bool | None = None
 ) -> jax.Array:
     """(T, 2) int32 grid coords -> (T, 2) int32 data-space element origins.
 
     Implements D = A x B + C (Eq. 32) with one (8,8)x(8,128) MXU matmul
     per 128 blocks.  C carries the intra-block offset of thread (0, 0)
-    (zero here; real kernels add the full lane pattern).
+    (zero here; real kernels add the full lane pattern).  ``interpret``
+    resolves through ``policy.default_interpret()`` when None.
     """
+    interpret = resolve_interpret(interpret)
     t = wxy.shape[0]
     assert wxy.shape == (t, 2) and t % 128 == 0
 

@@ -1,9 +1,17 @@
 """Public jit'd wrappers for the kernels package.
 
 These are the entry points the rest of the framework (and users) call;
-each selects a schedule (`kind`), jit-compiles, and for non-simplex
-backends falls back to the pure-jnp reference implementation so models
-run identically on hosts without Pallas support.
+each resolves a schedule (``kind='auto'`` asks the ``repro.autotune``
+subsystem — kernels never hand-pick a schedule), jit-compiles, and for
+non-simplex backends falls back to the pure-jnp reference implementation
+so models run identically on hosts without Pallas support.
+
+Execution policy lives in ``kernels/policy.py`` and is re-exported here:
+``default_interpret()`` resolves the per-backend Pallas mode (CPU can
+only interpret; TPU/GPU compile the index_maps; ``REPRO_INTERPRET``
+overrides).  The fused-XLA compiled executors — the compiled path that
+works on every backend, including CPU — live in ``kernels/compiled.py``
+and are exported here as ``simplex_accum*_compiled``.
 """
 
 from __future__ import annotations
@@ -14,8 +22,14 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .compiled import (
+    accum2d_compiled,
+    accum3d_compiled,
+    accum_md_compiled,
+)
 from .flash_attention import flash_attention
 from .hmap_mxu import hmap2_coords_mxu
+from .policy import default_interpret, resolve_interpret
 from .simplex_kernels import (
     accum2d,
     accum3d,
@@ -27,68 +41,93 @@ from .simplex_kernels import (
 )
 
 __all__ = [
+    "default_interpret",
+    "resolve_interpret",
     "simplex_accum2d",
     "simplex_edm2d",
     "simplex_ca2d",
     "simplex_accum3d",
     "simplex_ca3d",
     "simplex_accum_md",
+    "simplex_accum2d_compiled",
+    "simplex_accum3d_compiled",
+    "simplex_accum_md_compiled",
     "causal_flash_attention",
     "hmap_coords_mxu",
     "map_table",
 ]
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "kind"))
-def simplex_accum2d(x, rho: int = 8, kind: str = "hmap"):
-    return accum2d(x, rho=rho, kind=kind)
+@functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
+def simplex_accum2d(x, rho: int = 8, kind: str = "auto", interpret=None):
+    return accum2d(x, rho=rho, kind=kind, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "kind"))
-def simplex_edm2d(p, rho: int = 8, kind: str = "hmap"):
-    return edm2d(p, rho=rho, kind=kind)
+@functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
+def simplex_edm2d(p, rho: int = 8, kind: str = "auto", interpret=None):
+    return edm2d(p, rho=rho, kind=kind, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "kind"))
-def simplex_ca2d(state, rho: int = 8, kind: str = "hmap"):
-    return ca2d(state, rho=rho, kind=kind)
-
-
-@functools.partial(jax.jit, static_argnames=("rho", "kind"))
-def simplex_accum3d(x, rho: int = 4, kind: str = "table"):
-    return accum3d(x, rho=rho, kind=kind)
-
-
-@functools.partial(jax.jit, static_argnames=("rho", "kind"))
-def simplex_ca3d(state, rho: int = 4, kind: str = "table"):
-    return ca3d(state, rho=rho, kind=kind)
-
-
-@functools.partial(jax.jit, static_argnames=("rho", "kind"))
-def simplex_accum_md(x, rho: int = 2, kind: str = "table"):
-    """General-m accumulate; m = x.ndim (DESIGN.md §4)."""
-    return accum_md(x, rho=rho, kind=kind)
+@functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
+def simplex_ca2d(state, rho: int = 8, kind: str = "auto", interpret=None):
+    return ca2d(state, rho=rho, kind=kind, interpret=interpret)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "block_q", "block_kv", "impl")
+    jax.jit, static_argnames=("rho", "kind", "interpret", "split")
+)
+def simplex_accum3d(
+    x, rho: int = 4, kind: str = "auto", interpret=None, split=None
+):
+    return accum3d(x, rho=rho, kind=kind, interpret=interpret, split=split)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
+def simplex_ca3d(state, rho: int = 4, kind: str = "auto", interpret=None):
+    return ca3d(state, rho=rho, kind=kind, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rho", "kind", "interpret", "split")
+)
+def simplex_accum_md(
+    x, rho: int = 2, kind: str = "auto", interpret=None, split=None
+):
+    """General-m accumulate; m = x.ndim (DESIGN.md §4)."""
+    return accum_md(x, rho=rho, kind=kind, interpret=interpret, split=split)
+
+
+# Fused-XLA compiled executors (kernels/compiled.py): the whole schedule
+# walk is traced into ONE jit program — the compiled-numbers path on
+# hosts whose Pallas backend can only interpret (DESIGN.md §5).
+simplex_accum2d_compiled = accum2d_compiled
+simplex_accum3d_compiled = accum3d_compiled
+simplex_accum_md_compiled = accum_md_compiled
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "block_q", "block_kv", "impl", "interpret")
 )
 def causal_flash_attention(
     q, k, v, kind: str = "folded", block_q: int = 128, block_kv: int = 128,
-    impl: str = "pallas",
+    impl: str = "pallas", interpret=None,
 ):
     """Causal GQA attention.  impl='pallas' uses the simplex-grid kernel
-    (interpret mode off-TPU); impl='xla' is the fused-XLA reference path
-    used by the distributed dry-run (Pallas TPU kernels cannot lower on
-    the CPU backend — DESIGN.md §8)."""
+    (interpret mode resolved per backend — policy.default_interpret);
+    impl='xla' is the fused-XLA reference path used by the distributed
+    dry-run (Pallas TPU kernels cannot lower on the CPU backend —
+    DESIGN.md §8)."""
     if impl == "xla":
         return ref.causal_attention(q, k, v)
-    return flash_attention(q, k, v, kind=kind, block_q=block_q, block_kv=block_kv)
+    return flash_attention(
+        q, k, v, kind=kind, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("rho",))
-def hmap_coords_mxu(wxy, rho: int = 1):
-    return hmap2_coords_mxu(wxy, rho=rho)
+@functools.partial(jax.jit, static_argnames=("rho", "interpret"))
+def hmap_coords_mxu(wxy, rho: int = 1, interpret=None):
+    return hmap2_coords_mxu(wxy, rho=rho, interpret=interpret)
 
 
 def map_table(nb: int, kind: str = "hmap"):

@@ -24,6 +24,20 @@ dimension:
 ``accum_md`` extends the ACCUM test to arbitrary m (the first consumer
 of the m >= 4 schedules).
 
+Execution mode is resolved per backend by ``kernels/policy.py`` (no
+``pallas_call`` here hardcodes ``interpret=True`` anymore): every kernel
+takes ``interpret: bool | None = None`` — None resolves through
+``policy.default_interpret()`` (CPU interprets, TPU/GPU compile the
+index_maps; ``REPRO_INTERPRET=1`` forces the old behavior).  On the
+compiled path block shapes must satisfy the 8x128 Mosaic tiling
+(``policy.check_tile_alignment``); tests use small rho under interpret.
+
+``kind='composite'`` schedules with many pieces can additionally be
+*split* into one ``pallas_call`` per piece (``split=`` argument on the
+accumulate kernels): each launch decodes only its own factor chain
+instead of the O(pieces) select chain, at the cost of one launch per
+piece — ``repro.autotune.should_split_pieces`` decides the default.
+
 TPU notes: tiles are (rho, rho) with rho a multiple of the 8x128-friendly
 sizes in production (tests use small rho under interpret=True; the grid /
 BlockSpec structure is identical).  Out-of-domain grid steps write to a
@@ -38,6 +52,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.schedule import SimplexSchedule, resolve_kind
+
+from .policy import check_tile_alignment, resolve_interpret
 
 __all__ = [
     "map2d",
@@ -81,8 +97,11 @@ def grid_steps_2d(nb: int, kind: str) -> int:
 # ---------------------------------------------------------------------------
 
 
-def map2d(nb: int, kind: str = "hmap", chunk: int = 128) -> jax.Array:
+def map2d(
+    nb: int, kind: str = "hmap", chunk: int = 128, interpret: bool | None = None
+) -> jax.Array:
     """Returns (steps, 3) int32: (x, y, valid) per grid step."""
+    interpret = resolve_interpret(interpret)
     sched = _schedule(2, nb, kind)
     (w, h), fn = sched.grid, sched.map
     steps = sched.steps
@@ -104,7 +123,7 @@ def map2d(nb: int, kind: str = "hmap", chunk: int = 128) -> jax.Array:
         out_shape=jax.ShapeDtypeStruct((padded, 3), jnp.int32),
         grid=(padded // chunk,),
         out_specs=pl.BlockSpec((chunk, 3), lambda i: (i, 0)),
-        interpret=True,
+        interpret=interpret,
     )()
     return out[:steps]
 
@@ -114,7 +133,12 @@ def map2d(nb: int, kind: str = "hmap", chunk: int = 128) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def accum2d(x: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
+def accum2d(
+    x: jax.Array,
+    rho: int = 8,
+    kind: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
     """+1 on the inclusive lower triangle of x (n x n, rho | n).
 
     Untouched (out-of-domain) tiles keep their input value via
@@ -122,6 +146,8 @@ def accum2d(x: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
     """
     n = x.shape[0]
     assert x.shape == (n, n) and n % rho == 0
+    interpret = resolve_interpret(interpret)
+    check_tile_alignment((rho, rho), interpret)
     nb = n // rho
     sched = _schedule(2, nb, kind)
     (w, h), fn = sched.grid, sched.map
@@ -147,7 +173,7 @@ def accum2d(x: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
         in_specs=[pl.BlockSpec((rho, rho), in_map)],
         out_specs=pl.BlockSpec((rho, rho), in_map),
         input_output_aliases={0: 0},
-        interpret=True,
+        interpret=interpret,
     )(x)
 
 
@@ -156,7 +182,12 @@ def accum2d(x: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def edm2d(p: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
+def edm2d(
+    p: jax.Array,
+    rho: int = 8,
+    kind: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
     """out[i, j] = ||p_i - p_j|| on the inclusive lower triangle.
 
     p: (n, d).  Out-of-domain tiles are written 0 via a zeros-aliased
@@ -164,6 +195,8 @@ def edm2d(p: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
     """
     n, d = p.shape
     assert n % rho == 0
+    interpret = resolve_interpret(interpret)
+    check_tile_alignment((rho, rho), interpret)
     nb = n // rho
     sched = _schedule(2, nb, kind)
     (w, h), fn = sched.grid, sched.map
@@ -205,7 +238,7 @@ def edm2d(p: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
         ],
         out_specs=pl.BlockSpec((rho, rho), out_map),
         input_output_aliases={2: 0},
-        interpret=True,
+        interpret=interpret,
     )(p, p, zeros)
 
 
@@ -214,12 +247,19 @@ def edm2d(p: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def ca2d(state: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
+def ca2d(
+    state: jax.Array,
+    rho: int = 8,
+    kind: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
     """One GoL step on the inclusive lower triangle (periodic underlying
     square).  Nine shifted input refs provide the halo — the standard
     Pallas stencil pattern (no element-offset reads on TPU)."""
     n = state.shape[0]
     assert state.shape == (n, n) and n % rho == 0
+    interpret = resolve_interpret(interpret)
+    check_tile_alignment((rho, rho), interpret)
     nb = n // rho
     sched = _schedule(2, nb, kind)
     (w, h), fn = sched.grid, sched.map
@@ -284,7 +324,7 @@ def ca2d(state: jax.Array, rho: int = 8, kind: str = "hmap") -> jax.Array:
         in_specs=[pl.BlockSpec((rho, rho), make_map(dy, dx)) for dy, dx in shifts],
         out_specs=pl.BlockSpec((rho, rho), out_map),
         input_output_aliases={4: 0},  # centre ref aliases the output
-        interpret=True,
+        interpret=interpret,
     )(*([state] * 9))
 
 
@@ -306,51 +346,90 @@ def _sched_linear(m: int, nb: int, kind: str):
     return sched.steps, sched.map, sched.prefetch
 
 
+def _launch_plan(m: int, nb: int, kind: str, split: bool | None = None):
+    """[(steps, map_fn, table)] — one entry per ``pallas_call`` launch.
+
+    Composite schedules pay O(pieces) selects per grid step inside the
+    branchless map; when that chain dominates (many pieces, enough
+    steps to amortize per-launch overhead — see
+    ``repro.autotune.should_split_pieces``) the schedule is split into
+    one launch per piece, each decoding only its own factor chain.
+    Splitting is only used by the element-local accumulate kernels:
+    pieces cover disjoint tiles, so chaining launches through the
+    aliased output is exact.  ``split`` forces the decision either way.
+    """
+    sched = _schedule(m, nb, kind)
+    if sched.kind == "composite":
+        subs = sched.split_pieces()
+        if split is None:
+            from repro.autotune import should_split_pieces
+
+            split = should_split_pieces(len(subs), sched.steps)
+        if split and len(subs) > 1:
+            return [(s.steps, s.map, None) for s in subs]
+    return [(sched.steps, sched.map, sched.prefetch)]
+
+
 def grid_steps_3d(nb: int, kind: str) -> int:
     return _schedule(3, nb, kind).steps
 
 
-def accum3d(x: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
+def accum3d(
+    x: jax.Array,
+    rho: int = 4,
+    kind: str = "auto",
+    interpret: bool | None = None,
+    split: bool | None = None,
+) -> jax.Array:
     """+1 on T(n) = {x+y+z < n}; axes (z, y, x); rho | n."""
     n = x.shape[0]
     assert x.shape == (n, n, n) and n % rho == 0
+    interpret = resolve_interpret(interpret)
+    check_tile_alignment((rho, rho, rho), interpret)
     nb = n // rho
-    steps, fn, table = _sched_linear(3, nb, kind)
-
-    def in_map(i, *pref):
-        bx, by, bz, v = fn(i, *pref)
-        # invalid steps park on the trash tile (last z block of padding)
-        bz = jnp.where(v, bz, nb)
-        return bz, by, bx
-
-    def kernel(*refs):
-        if table is not None:
-            tab_ref, x_ref, o_ref = refs
-            pref = (tab_ref,)
-        else:
-            x_ref, o_ref = refs
-            pref = ()
-        i = pl.program_id(0)
-        bx, by, bz, valid = fn(i, *pref)
-        gz = bz * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 0)
-        gy = by * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 1)
-        gx = bx * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 2)
-        tet_m = ((gx + gy + gz) < n) & valid
-        o_ref[...] = jnp.where(tet_m, x_ref[...] + 1, x_ref[...])
 
     xp = jnp.concatenate([x, jnp.zeros((rho, n, n), x.dtype)], axis=0)
-    grid_spec, args = _grid_spec(
-        table, steps, [pl.BlockSpec((rho, rho, rho), in_map)],
-        pl.BlockSpec((rho, rho, rho), in_map),
-    )
-    out = pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
-        grid_spec=grid_spec,
-        input_output_aliases={len(args): 0},
-        interpret=True,
-    )(*args, xp)
-    return out[:n]
+    for steps, fn, table in _launch_plan(3, nb, kind, split):
+
+        def in_map(i, *pref, fn=fn):
+            bx, by, bz, v = fn(i, *pref)
+            # invalid steps park on the trash tile (last z block of padding)
+            bz = jnp.where(v, bz, nb)
+            return bz, by, bx
+
+        def kernel(*refs, fn=fn, table=table):
+            if table is not None:
+                tab_ref, x_ref, o_ref = refs
+                pref = (tab_ref,)
+            else:
+                x_ref, o_ref = refs
+                pref = ()
+            i = pl.program_id(0)
+            bx, by, bz, valid = fn(i, *pref)
+            gz = bz * rho + jax.lax.broadcasted_iota(
+                jnp.int32, (rho, rho, rho), 0
+            )
+            gy = by * rho + jax.lax.broadcasted_iota(
+                jnp.int32, (rho, rho, rho), 1
+            )
+            gx = bx * rho + jax.lax.broadcasted_iota(
+                jnp.int32, (rho, rho, rho), 2
+            )
+            tet_m = ((gx + gy + gz) < n) & valid
+            o_ref[...] = jnp.where(tet_m, x_ref[...] + 1, x_ref[...])
+
+        grid_spec, args = _grid_spec(
+            table, steps, [pl.BlockSpec((rho, rho, rho), in_map)],
+            pl.BlockSpec((rho, rho, rho), in_map),
+        )
+        xp = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            grid_spec=grid_spec,
+            input_output_aliases={len(args): 0},
+            interpret=interpret,
+        )(*args, xp)
+    return xp[:n]
 
 
 def _grid_spec(table, steps, in_specs, out_specs):
@@ -371,14 +450,23 @@ def _grid_spec(table, steps, in_specs, out_specs):
     return spec, (jnp.asarray(table),)
 
 
-def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
+def ca3d(
+    state: jax.Array,
+    rho: int = 4,
+    kind: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
     """One 26-neighbour GoL step on T(n), free boundaries.
 
     27 shifted input refs (clamped at the domain edge; the true-coordinate
     mask zeroes out-of-range contributions, so clamp duplicates are inert).
+    Always a single launch — the halo reads make per-piece chaining
+    unsound (a split piece would read neighbours already stepped).
     """
     n = state.shape[0]
     assert state.shape == (n, n, n) and n % rho == 0
+    interpret = resolve_interpret(interpret)
+    check_tile_alignment((rho, rho, rho), interpret)
     nb = n // rho
     steps, fn, table = _sched_linear(3, nb, kind)
     shifts = [
@@ -462,7 +550,7 @@ def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
         out_shape=jax.ShapeDtypeStruct(sp.shape, state.dtype),
         grid_spec=grid_spec,
         input_output_aliases={len(args) + centre_idx: 0},
-        interpret=True,
+        interpret=interpret,
     )(*args, *([sp] * 27))
     return out[:n]
 
@@ -474,7 +562,13 @@ def ca3d(state: jax.Array, rho: int = 4, kind: str = "table") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def accum_md(x: jax.Array, rho: int = 2, kind: str = "table") -> jax.Array:
+def accum_md(
+    x: jax.Array,
+    rho: int = 2,
+    kind: str = "auto",
+    interpret: bool | None = None,
+    split: bool | None = None,
+) -> jax.Array:
     """+1 on T(n) = {sum(coords) < n} for an m-cube input of shape (n,)*m.
 
     m is taken from ``x.ndim`` (any m >= 3 — the linear-grid walks; the
@@ -483,52 +577,56 @@ def accum_md(x: jax.Array, rho: int = 2, kind: str = "table") -> jax.Array:
     order (x_0 fastest) and array axis j holds x_{m-1-j}, matching the
     3D kernels' (z, y, x) layout.  Out-of-domain grid steps park on a
     trash tile appended along axis 0; untouched tiles keep their input
-    value via aliasing (in-place semantics).
+    value via aliasing (in-place semantics).  Composite schedules may be
+    split into one launch per piece (``split``; see ``_launch_plan``).
     """
     m = x.ndim
     assert m >= 3, "use accum2d for the 2-simplex (its grid is (w, h))"
     n = x.shape[0]
     assert all(s == n for s in x.shape) and n % rho == 0
+    interpret = resolve_interpret(interpret)
+    check_tile_alignment((rho,) * m, interpret)
     nb = n // rho
-    steps, fn, table = _sched_linear(m, nb, kind)
-
-    def blocks_of(i, pref):
-        out = fn(i, *pref)
-        coords, v = out[:-1], out[-1]
-        return tuple(coords[::-1]), v  # axis order: axis 0 = x_{m-1}
-
-    def in_map(i, *pref):
-        blocks, v = blocks_of(i, pref)
-        return (jnp.where(v, blocks[0], nb),) + blocks[1:]
-
-    def kernel(*refs):
-        if table is not None:
-            pref = (refs[0],)
-            refs = refs[1:]
-        else:
-            pref = ()
-        x_ref, o_ref = refs
-        i = pl.program_id(0)
-        blocks, valid = blocks_of(i, pref)
-        shape = (rho,) * m
-        gsum = jnp.zeros(shape, jnp.int32)
-        for ax in range(m):
-            gsum = gsum + blocks[ax] * rho + jax.lax.broadcasted_iota(
-                jnp.int32, shape, ax
-            )
-        mask = (gsum < n) & valid
-        o_ref[...] = jnp.where(mask, x_ref[...] + 1, x_ref[...])
 
     xp = jnp.concatenate(
         [x, jnp.zeros((rho,) + x.shape[1:], x.dtype)], axis=0
     )
-    spec = pl.BlockSpec((rho,) * m, in_map)
-    grid_spec, args = _grid_spec(table, steps, [spec], spec)
-    out = pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
-        grid_spec=grid_spec,
-        input_output_aliases={len(args): 0},
-        interpret=True,
-    )(*args, xp)
-    return out[:n]
+    for steps, fn, table in _launch_plan(m, nb, kind, split):
+
+        def blocks_of(i, pref, fn=fn):
+            out = fn(i, *pref)
+            coords, v = out[:-1], out[-1]
+            return tuple(coords[::-1]), v  # axis order: axis 0 = x_{m-1}
+
+        def in_map(i, *pref, blocks_of=blocks_of):
+            blocks, v = blocks_of(i, pref)
+            return (jnp.where(v, blocks[0], nb),) + blocks[1:]
+
+        def kernel(*refs, blocks_of=blocks_of, table=table):
+            if table is not None:
+                pref = (refs[0],)
+                refs = refs[1:]
+            else:
+                pref = ()
+            x_ref, o_ref = refs
+            i = pl.program_id(0)
+            blocks, valid = blocks_of(i, pref)
+            shape = (rho,) * m
+            gsum = jnp.zeros(shape, jnp.int32)
+            for ax in range(m):
+                gsum = gsum + blocks[ax] * rho + jax.lax.broadcasted_iota(
+                    jnp.int32, shape, ax
+                )
+            mask = (gsum < n) & valid
+            o_ref[...] = jnp.where(mask, x_ref[...] + 1, x_ref[...])
+
+        spec = pl.BlockSpec((rho,) * m, in_map)
+        grid_spec, args = _grid_spec(table, steps, [spec], spec)
+        xp = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            grid_spec=grid_spec,
+            input_output_aliases={len(args): 0},
+            interpret=interpret,
+        )(*args, xp)
+    return xp[:n]

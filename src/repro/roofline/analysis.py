@@ -38,6 +38,16 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B / s / chip
 LINK_BW = 50e9  # B / s / ICI link
 
+# -- schedule cost-model constants (per grid step / per launch) -------------
+# Scalar-unit costs of the index_map forms on the compiled path; coarse,
+# but their *ratios* are what the autotuner ranks kinds by (DESIGN.md §5).
+SELECT_S = 1.5e-9  # one branchless select/compare chain element
+SMEM_READ_S = 4e-9  # one scalar-prefetch (SMEM) coordinate read
+PREDICATE_S = 1.0e-9  # the bb add-compare validity predicate
+LAUNCH_OVERHEAD_S = 5e-6  # fixed cost of one extra pallas_call launch
+HOST_ENUM_S = 2.5e-8  # host-side per-cell cost of an O(V) table build
+TABLE_AMORTIZE = 1000  # launches a built table is amortized over
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -53,7 +63,73 @@ _COLL_OPS = (
     "collective-permute",
 )
 
-__all__ = ["collective_census", "roofline_terms", "load_cells", "wire_bytes"]
+__all__ = [
+    "collective_census",
+    "roofline_terms",
+    "load_cells",
+    "wire_bytes",
+    "schedule_cost_model",
+]
+
+
+def schedule_cost_model(
+    kind: str,
+    steps: int,
+    *,
+    m: int,
+    n: int,
+    useful: int,
+    pieces: int = 1,
+    rho: int = 8,
+    dtype_bytes: int = 4,
+    hbm_bw: float = HBM_BW,
+) -> float:
+    """Predicted seconds per launch of one schedule kind (memory-bound).
+
+    The model the ``repro.autotune`` tuner ranks candidate kinds with
+    when no measured ``BENCH_maps.json`` row applies.  Two terms:
+
+    * tile traffic — each grid step streams one (rho,)*m tile in and out
+      of HBM: ``steps * 2 * rho^m * dtype_bytes / hbm_bw``.  Wasted
+      steps (steps > useful) pay full traffic, which is exactly how the
+      paper's extra parallel space costs on hardware.
+    * index-map overhead — per-step scalar work of the map form:
+      ``bb`` one predicate; ``table`` one SMEM read (plus its O(V) host
+      build amortized over ``TABLE_AMORTIZE`` launches); ``hmap``/
+      ``octant`` a log2(n)-level select chain; ``composite`` an
+      O(pieces) select chain (the term the per-piece launch split
+      removes — see ``repro.autotune.should_split_pieces``).
+
+    Args:
+        kind: Registered schedule kind.
+        steps: Grid steps the schedule launches.
+        m: Simplex dimension.
+        n: Tile count per side.
+        useful: Simplex cells covered (V) — table build cost scales on it.
+        pieces: Composite piece count (ignored for other kinds).
+        rho: Tile side in elements.
+        dtype_bytes: Element width.
+        hbm_bw: Memory bandwidth to model against.
+
+    Returns:
+        Predicted seconds for one launch of the full walk.
+    """
+    tile_bytes = 2 * (rho**m) * dtype_bytes  # read + write
+    t_mem = steps * tile_bytes / hbm_bw
+    if kind == "bb":
+        per_step = PREDICATE_S
+        build = 0.0
+    elif kind == "table":
+        per_step = SMEM_READ_S
+        build = useful * HOST_ENUM_S / TABLE_AMORTIZE
+    elif kind == "composite":
+        per_step = SELECT_S * max(pieces, 1)
+        build = 0.0
+    else:  # hmap / octant / rb: select chain over the recursion levels
+        levels = max(int(n - 1).bit_length(), 1)
+        per_step = SELECT_S * levels
+        build = 0.0
+    return t_mem + steps * per_step + build
 
 
 def _shape_bytes(tok: str) -> int:

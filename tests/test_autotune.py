@@ -1,0 +1,157 @@
+"""Autotuner tests (DESIGN.md §5): decision quality, disk-cache hit
+path, stale invalidation, and the measured-row overlay."""
+
+import json
+
+import pytest
+
+from repro.autotune import (
+    candidate_kinds,
+    choose_kind,
+    should_split_pieces,
+)
+from repro.autotune import tuner as T
+from repro.core.schedule import registered_kinds, resolve_kind
+
+
+@pytest.fixture()
+def env(tmp_path, monkeypatch):
+    """Hermetic tuner env: private cache + bench artifact paths."""
+    cache = tmp_path / "autotune.json"
+    bench = tmp_path / "BENCH_maps.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    monkeypatch.setenv("REPRO_BENCH_ARTIFACT", str(bench))
+    monkeypatch.delenv("REPRO_AUTOTUNE_DISABLE", raising=False)
+    return {"cache": cache, "bench": bench}
+
+
+def _bench_artifact(rows):
+    return {"schema": "bench-maps/v2", "rows": rows}
+
+
+def _row(m, n_elems, kind, us, steps, compiled=True, backend="cpu"):
+    return {
+        "test": f"ACCUM{m}D" if m > 2 else "ACCUM", "map": kind, "m": m,
+        "n": n_elems, "grid_steps": steps, "waste": 0.0,
+        "us_per_call": us, "backend": backend, "jax_version": "x",
+        "compiled": compiled,
+    }
+
+
+def test_decision_is_concrete_and_cached(env):
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.kind in registered_kinds(3)
+    assert d.source in ("model", "measured")
+    assert d.scores_us  # per-candidate scores recorded
+    data = json.loads(env["cache"].read_text())
+    assert data["schema"] == T.CACHE_SCHEMA
+    assert "m=3,n=8,backend=cpu" in data["entries"]
+
+    d2 = choose_kind(3, 8, backend="cpu")
+    assert d2.source == "cache"
+    assert d2.kind == d.kind
+
+
+def test_cache_hit_does_not_recompute(env, monkeypatch):
+    d = choose_kind(2, 16, backend="cpu")
+
+    def boom(*a, **k):
+        raise AssertionError("scored on a cache hit")
+
+    monkeypatch.setattr(T, "_model_scores", boom)
+    monkeypatch.setattr(T, "_measured_scores", boom)
+    d2 = choose_kind(2, 16, backend="cpu")
+    assert d2.source == "cache" and d2.kind == d.kind
+
+
+def test_refresh_bypasses_cache(env, monkeypatch):
+    choose_kind(2, 16, backend="cpu")
+    d = choose_kind(2, 16, backend="cpu", refresh=True)
+    assert d.source != "cache"
+
+
+def test_stale_on_bench_artifact_change(env):
+    choose_kind(3, 8, backend="cpu")
+    env["bench"].write_text(json.dumps(_bench_artifact([])))
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.source != "cache"  # fingerprint changed -> recompute
+    assert choose_kind(3, 8, backend="cpu").source == "cache"
+
+
+def test_stale_on_jax_version_change(env, monkeypatch):
+    choose_kind(3, 8, backend="cpu")
+    monkeypatch.setattr(T, "_jax_version", lambda: "999.0.0")
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.source != "cache"
+
+
+def test_measured_rows_win(env):
+    """Measured ranking kicks in when every candidate has a row."""
+    from repro.core.schedule import SimplexSchedule
+
+    kinds = candidate_kinds(3, 8)
+    assert "bb" in kinds
+    rows = [
+        _row(3, 32, k, us=(0.001 if k == "bb" else 1000.0),
+             steps=SimplexSchedule(3, 8, k).steps)
+        for k in kinds
+    ]
+    env["bench"].write_text(json.dumps(_bench_artifact(rows)))
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.kind == "bb"
+    assert d.source == "measured"
+
+
+def test_partial_measured_coverage_keeps_model_ranking(env):
+    """One measured row must not distort the ranking: mixing a
+    whole-executor wall-clock with model overhead estimates would
+    penalize exactly the kind that got benchmarked."""
+    env["bench"].write_text(json.dumps(_bench_artifact([
+        _row(3, 32, "bb", us=0.001, steps=8**3),
+    ])))
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.source == "model"
+
+
+def test_interpret_rows_are_ignored(env):
+    env["bench"].write_text(json.dumps(_bench_artifact([
+        _row(3, 32, "bb", us=0.001, steps=8**3, compiled=False),
+    ])))
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.source == "model"  # emulator timing must not override
+
+
+def test_other_backend_rows_are_ignored(env):
+    env["bench"].write_text(json.dumps(_bench_artifact([
+        _row(3, 32, "bb", us=0.001, steps=8**3, backend="tpu"),
+    ])))
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.source == "model"
+
+
+def test_candidate_kinds_m2_excludes_linear_grid_kinds():
+    for n in (8, 16, 12):
+        ks = candidate_kinds(2, n)
+        assert ks
+        assert "table" not in ks and "composite" not in ks
+
+
+def test_resolve_kind_auto_is_concrete(env):
+    for m, n in [(2, 16), (2, 12), (3, 8), (3, 6), (4, 4)]:
+        kind = resolve_kind(m, n, "auto", backend="cpu")
+        assert kind != "auto"
+        assert kind in registered_kinds(m)
+
+
+def test_disable_env_skips_cache(env, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_DISABLE", "1")
+    d = choose_kind(3, 8, backend="cpu")
+    assert d.source != "cache"
+    assert not env["cache"].exists()
+
+
+def test_should_split_pieces_threshold(monkeypatch):
+    monkeypatch.delenv("REPRO_SPLIT_PIECES", raising=False)
+    assert not should_split_pieces(2, 10**7)  # too few pieces
+    assert not should_split_pieces(10, 100)  # chain cheaper than launches
+    assert should_split_pieces(10, 10**7)

@@ -1,0 +1,217 @@
+"""Compiled-path tests (DESIGN.md §5).
+
+Three layers:
+  * index_map parity — the compiled (one-jit-program) evaluation of
+    every registered schedule map visits exactly the host-built step
+    list, for exhaustive small (m, n);
+  * executor parity — the fused-XLA ACCUM executors match the numpy
+    truth and the interpret-mode Pallas kernels, including the per-piece
+    launch split of composite schedules;
+  * policy — per-backend interpret resolution, the REPRO_INTERPRET
+    override, and the compiled-tile alignment contract.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedule import SimplexSchedule, registered_kinds
+from repro.kernels import simplex_kernels as K
+from repro.kernels.compiled import (
+    accum2d_compiled,
+    accum3d_compiled,
+    accum_md_compiled,
+    schedule_coords_compiled,
+)
+from repro.kernels.policy import (
+    aligned_rho,
+    check_tile_alignment,
+    default_interpret,
+    resolve_interpret,
+)
+
+# (m, n) grid for the exhaustive index_map parity sweep: pow2 and
+# non-pow2 sides so every kind's resolution (recursion, composite
+# decomposition, table walk) is exercised.
+_PARITY_MN = [(2, 4), (2, 8), (2, 6), (2, 12), (3, 4), (3, 8), (3, 6),
+              (4, 4), (4, 6)]
+
+
+def _constructible(m, n):
+    out = []
+    for kind in registered_kinds(m):
+        try:
+            SimplexSchedule(m, n, kind)
+        except (ValueError, AssertionError):
+            continue
+        out.append(kind)
+    return out
+
+
+@pytest.mark.parametrize("m,n", _PARITY_MN)
+def test_compiled_index_map_visits_host_step_list(m, n):
+    """The jnp map, jit-compiled over all grid steps, equals .table()."""
+    for kind in _constructible(m, n):
+        sched = SimplexSchedule(m, n, kind)
+        got = schedule_coords_compiled(m, n, kind)
+        want = np.asarray(sched.table(), dtype=np.int64)
+        assert got.shape == want.shape, (kind, got.shape, want.shape)
+        assert np.array_equal(got.astype(np.int64), want), (
+            f"compiled index_map diverges from host step list "
+            f"(m={m}, n={n}, kind={kind})"
+        )
+
+
+def _tri2(n):
+    return np.tri(n, dtype=np.int32)
+
+
+def _simplex_md(m, n):
+    ii = np.arange(n)
+    g = np.zeros((n,) * m, dtype=np.int64)
+    for ax in range(m):
+        g = g + ii.reshape((1,) * ax + (n,) + (1,) * (m - 1 - ax))
+    return (g < n).astype(np.int32)
+
+
+@pytest.mark.parametrize("kind", ["hmap", "rb", "bb", "auto"])
+def test_accum2d_compiled_parity(kind):
+    n, rho = 32, 8
+    x = np.arange(n * n, dtype=np.int32).reshape(n, n) % 97
+    want = x + _tri2(n)
+    got = np.asarray(accum2d_compiled(jnp.asarray(x), rho=rho, kind=kind))
+    assert np.array_equal(got, want)
+    if kind != "auto":
+        interp = np.asarray(
+            K.accum2d(jnp.asarray(x), rho=rho, kind=kind, interpret=True)
+        )
+        assert np.array_equal(got, interp)
+
+
+@pytest.mark.parametrize(
+    "m,n,rho,kind",
+    [
+        (3, 16, 4, "hmap"),
+        (3, 16, 4, "octant"),
+        (3, 16, 4, "bb"),
+        (3, 16, 4, "table"),
+        (3, 24, 4, "composite"),
+        (3, 24, 4, "table"),
+        (4, 8, 2, "hmap"),
+        (4, 8, 2, "table"),
+        (4, 12, 2, "composite"),
+        (3, 16, 4, "auto"),
+    ],
+)
+def test_accum_md_compiled_parity(m, n, rho, kind):
+    x = (np.arange(n**m, dtype=np.int32).reshape((n,) * m)) % 53
+    want = x + _simplex_md(m, n)
+    got = np.asarray(accum_md_compiled(jnp.asarray(x), rho=rho, kind=kind))
+    assert np.array_equal(got, want)
+
+
+def test_accum3d_split_parity():
+    """Per-piece launch split == single composite launch == compiled."""
+    n, rho = 24, 4
+    x = (np.arange(n**3, dtype=np.int32).reshape(n, n, n)) % 31
+    want = x + _simplex_md(3, n)
+    unsplit = np.asarray(
+        K.accum3d(jnp.asarray(x), rho=rho, kind="composite", split=False)
+    )
+    split = np.asarray(
+        K.accum3d(jnp.asarray(x), rho=rho, kind="composite", split=True)
+    )
+    comp = np.asarray(
+        accum3d_compiled(jnp.asarray(x), rho=rho, kind="composite")
+    )
+    assert np.array_equal(unsplit, want)
+    assert np.array_equal(split, want)
+    assert np.array_equal(comp, want)
+
+
+def test_accum_md_split_parity_m4():
+    n, rho = 12, 2
+    x = (np.arange(n**4, dtype=np.int32).reshape((n,) * 4)) % 19
+    want = x + _simplex_md(4, n)
+    for split in (False, True):
+        got = np.asarray(
+            K.accum_md(jnp.asarray(x), rho=rho, kind="composite",
+                       split=split)
+        )
+        assert np.array_equal(got, want), f"split={split}"
+
+
+def test_split_env_override(monkeypatch):
+    """REPRO_SPLIT_PIECES forces the launch-split decision both ways."""
+    from repro.autotune import should_split_pieces
+
+    monkeypatch.setenv("REPRO_SPLIT_PIECES", "1")
+    assert should_split_pieces(2, 10)
+    monkeypatch.setenv("REPRO_SPLIT_PIECES", "0")
+    assert not should_split_pieces(100, 10**9)
+
+
+# -- policy -----------------------------------------------------------
+
+
+def test_default_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    assert default_interpret() is True
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    assert default_interpret() is False
+
+
+def test_default_interpret_per_backend(monkeypatch):
+    monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+    assert default_interpret("cpu") is True
+    assert default_interpret("tpu") is False
+    assert default_interpret("gpu") is False
+    # this host's live backend resolves without error to a bool
+    assert default_interpret() in (True, False)
+
+
+def test_resolve_interpret_passthrough(monkeypatch):
+    monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+    assert resolve_interpret(True, "tpu") is True
+    assert resolve_interpret(False, "cpu") is False
+    assert resolve_interpret(None, "cpu") is True
+    assert resolve_interpret(None, "tpu") is False
+
+
+def test_tile_alignment_contract():
+    # interpret mode: anything goes
+    check_tile_alignment((3, 5), interpret=True)
+    # compiled mode: (8k, 128k) tiles pass, others raise
+    check_tile_alignment((8, 128), interpret=False)
+    check_tile_alignment((16, 256), interpret=False)
+    check_tile_alignment((1, 8, 128), interpret=False)  # unit dims drop
+    with pytest.raises(ValueError):
+        check_tile_alignment((8, 100), interpret=False)
+    with pytest.raises(ValueError):
+        check_tile_alignment((5, 128), interpret=False)
+
+
+def test_aligned_rho():
+    assert aligned_rho(16, interpret=True) == 16
+    assert aligned_rho(16, interpret=False) == 128
+    assert aligned_rho(200, interpret=False) == 256
+
+
+def test_no_hardcoded_interpret_true_in_kernels():
+    """Every pallas_call threads the resolved policy, never a literal."""
+    import ast
+    import pathlib
+
+    pkg = pathlib.Path(K.__file__).parent
+    for py in pkg.glob("*.py"):
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg != "interpret":
+                    continue
+                assert not (
+                    isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                ), f"{py.name}:{node.lineno} hardcodes interpret=True"

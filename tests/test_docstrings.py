@@ -9,6 +9,7 @@ keeps the *content* from rotting).
 
 import doctest
 
+import repro.autotune.tuner
 import repro.core.schedule
 import repro.core.trapezoids
 
@@ -20,4 +21,10 @@ def test_schedule_doctests():
 
 def test_trapezoids_doctests():
     result = doctest.testmod(repro.core.trapezoids, verbose=False)
+    assert result.failed == 0 and result.attempted > 0
+
+
+def test_autotune_doctests(monkeypatch):
+    monkeypatch.delenv("REPRO_SPLIT_PIECES", raising=False)
+    result = doctest.testmod(repro.autotune.tuner, verbose=False)
     assert result.failed == 0 and result.attempted > 0
