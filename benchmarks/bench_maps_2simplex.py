@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.schedule import SimplexSchedule
 from repro.core.maps_baseline import lambda_map2_raw
 from repro.kernels import ref as R
-from repro.kernels import simplex_kernels as K
+from repro.kernels import engine as K
 
 
 def _time(f, *args, reps=3):
@@ -48,10 +48,10 @@ def run(n: int = 256, rho: int = 16):
     import functools
 
     tests = {
-        "MAP": lambda kind: functools.partial(K.map2d, nb, kind),
-        "ACCUM": lambda kind: functools.partial(K.accum2d, x, rho=rho, kind=kind),
+        "MAP": lambda kind: functools.partial(K.map_table, nb, m=2, kind=kind),
+        "ACCUM": lambda kind: functools.partial(K.accum, x, rho=rho, kind=kind),
         "EDM": lambda kind: functools.partial(K.edm2d, p, rho=rho, kind=kind),
-        "CA2D": lambda kind: functools.partial(K.ca2d, ca, rho=rho, kind=kind),
+        "CA2D": lambda kind: functools.partial(K.ca, ca, rho=rho, kind=kind),
     }
     for tname, mk in tests.items():
         bb_steps = SimplexSchedule(2, nb, "bb").steps

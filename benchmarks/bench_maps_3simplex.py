@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.schedule import SimplexSchedule
 from repro.kernels import ref as R
-from repro.kernels import simplex_kernels as K
+from repro.kernels import engine as K
 
 
 def _time(f, *args, reps=2):
@@ -37,8 +37,8 @@ def run(n: int = 32, rho: int = 4):
     ca = ca * R.tetra_mask(n, jnp.int32)
     rows = []
     tests = {
-        "ACCUM3D": lambda kind: functools.partial(K.accum3d, x, rho=rho, kind=kind),
-        "CA3D": lambda kind: functools.partial(K.ca3d, ca, rho=rho, kind=kind),
+        "ACCUM3D": lambda kind: functools.partial(K.accum, x, rho=rho, kind=kind),
+        "CA3D": lambda kind: functools.partial(K.ca, ca, rho=rho, kind=kind),
     }
     def sched(nb_, kind):
         return SimplexSchedule(3, nb_, kind)

@@ -29,7 +29,7 @@ def _map_rows_md(m: int = 4, n: int = 16, rho: int = 2):
     import jax.numpy as jnp
 
     from repro.core.schedule import SimplexSchedule, registered_kinds
-    from repro.kernels import simplex_kernels as K
+    from repro.kernels import engine as Eng
 
     nb = n // rho
     x = jax.random.randint(jax.random.PRNGKey(0), (n,) * m, 0, 50).astype(
@@ -40,7 +40,7 @@ def _map_rows_md(m: int = 4, n: int = 16, rho: int = 2):
     reps = 3
     for kind in registered_kinds(m):
         sched = SimplexSchedule(m, nb, kind)
-        f = jax.jit(lambda kind=kind: K.accum_md(x, rho=rho, kind=kind))
+        f = jax.jit(lambda kind=kind: Eng.accum_md(x, rho=rho, kind=kind))
         jax.block_until_ready(f())  # warmup/compile
         t0 = time.perf_counter()
         for _ in range(reps):
@@ -153,6 +153,92 @@ def _compiled_rows(quick: bool = False):
     return rows
 
 
+def _engine_parity_rows(quick: bool = False):
+    """ENGINE_PARITY section: the differential harness as artifact rows.
+
+    For each registered engine body x dimension x schedule kind, run the
+    engine-built kernel and record ``max_abs_err`` against the strongest
+    available baseline — the frozen hand-rolled kernel in
+    ``kernels/legacy.py`` where one exists (bit-parity expected, so the
+    recorded err must be 0), else the ``kernels/ref.py`` numpy oracle on
+    the domain (float-tolerance for the m >= 3 EDM bodies).  A non-zero
+    integer-body error aborts the run: a silently wrong engine must
+    never produce a plausible-looking benchmark artifact.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import engine as Eng
+    from repro.kernels import legacy as Leg
+    from repro.kernels import ref as Ref
+
+    kinds = {
+        2: ["hmap", "bb"] if quick else ["hmap", "rb", "bb", "composite"],
+        3: ["hmap", "table"] if quick else
+           ["hmap", "octant", "bb", "table", "composite"],
+        4: ["hmap", "composite"] if quick else
+           ["hmap", "bb", "table", "composite"],
+    }
+    sizes = {2: (16, 4), 3: (8, 2), 4: (8, 2)}
+    legacy_2d = ("hmap", "rb", "bb")
+    rows = []
+    for m, (n, rho) in sizes.items():
+        msk = np.asarray(Ref.simplex_mask(m, n))
+        x = jnp.asarray((np.arange(n**m, dtype=np.int64) % 97).astype(
+            np.int32).reshape((n,) * m))
+        p = jax.random.normal(jax.random.PRNGKey(m), (n, 3), jnp.float32)
+        s = (jax.random.uniform(jax.random.PRNGKey(m + 8), (n,) * m)
+             < 0.4).astype(jnp.int32) * Ref.simplex_mask(m, n, jnp.int32)
+
+        def _cases(kind):
+            has_legacy = m != 2 or kind in legacy_2d
+            yield ("accum", Eng.accum(x, rho=rho, kind=kind),
+                   ({2: Leg.accum2d, 3: Leg.accum3d}.get(m, Leg.accum_md)(
+                       x, rho=rho, kind=kind) if has_legacy
+                    else jnp.where(Ref.simplex_mask(m, n), Ref.accum_md(x),
+                                   x)),
+                   True)
+            edm = (Eng.edm2d(p, rho=rho, kind=kind) if m == 2
+                   else Eng.edm_md(p, m, rho=rho, kind=kind))
+            edm_base = (Leg.edm2d(p, rho=rho, kind=kind)
+                        if m == 2 and has_legacy else Ref.edm_md(p, m))
+            yield ("edm", edm, edm_base, m == 2 and has_legacy)
+            ca = Eng.ca(s, rho=rho, kind=kind)
+            if m in (2, 3) and has_legacy:
+                ca_base = {2: Leg.ca2d, 3: Leg.ca3d}[m](s, rho=rho, kind=kind)
+                exact = True
+            else:
+                ca_base = jnp.where(Ref.simplex_mask(m, n),
+                                    Ref.ca_md_step(s), s)
+                exact = True
+            yield ("ca", ca, ca_base, exact)
+
+        for kind in kinds[m]:
+            sched_steps = Eng.grid_steps(n // rho, kind, m=m)
+            for body, got, base, exact in _cases(kind):
+                err = float(np.max(np.abs(
+                    np.asarray(got, dtype=np.float64)
+                    - np.asarray(base, dtype=np.float64)
+                )))
+                if exact and err != 0.0:
+                    raise SystemExit(
+                        f"ENGINE_PARITY FAILED: body={body} m={m} "
+                        f"kind={kind} max_abs_err={err}"
+                    )
+                if not exact and err > 1e-4:
+                    raise SystemExit(
+                        f"ENGINE_PARITY FAILED (tolerance): body={body} "
+                        f"m={m} kind={kind} max_abs_err={err}"
+                    )
+                rows.append({
+                    "test": "ENGINE_PARITY", "body": body, "map": kind,
+                    "m": m, "n": n, "grid_steps": sched_steps,
+                    "max_abs_err": err,
+                })
+    return rows
+
+
 def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
     """Persist steps/waste/wall-time per (kind, m, n) for perf tracking.
 
@@ -190,6 +276,12 @@ def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
                 **(
                     {"autotune_source": r["autotune_source"]}
                     if "autotune_source" in r
+                    else {}
+                ),
+                **({"body": r["body"]} if "body" in r else {}),
+                **(
+                    {"max_abs_err": r["max_abs_err"]}
+                    if "max_abs_err" in r
                     else {}
                 ),
             }
@@ -246,7 +338,12 @@ def main(argv=None) -> None:
                   f"{r['us_per_call']:.0f},src={r.get('autotune_source', '-')}")
         print("# ==== §4.2: composite vs table (host build) ====")
         rc = _composite_rows()
-        path = write_maps_artifact(rcomp + rc, path=out)
+        print("# ==== engine parity (differential: engine vs legacy/ref) ====")
+        rp = _engine_parity_rows(quick=True)
+        for r in rp:
+            print(f"{r['test']},{r['body']},{r['map']},m={r['m']},"
+                  f"err={r['max_abs_err']:.2e}")
+        path = write_maps_artifact(rcomp + rc + rp, path=out)
         validate_artifact(path)
         print(f"# wrote + validated {path}")
         print(f"# total {time.time()-t0:.0f}s")
@@ -279,6 +376,11 @@ def main(argv=None) -> None:
     for r in rcomp:
         print(f"{r['test']},{r['map']},{r['grid_steps']},"
               f"{r['us_per_call']:.0f},src={r.get('autotune_source', '-')}")
+    print("# ==== engine parity (differential: engine vs legacy/ref) ====")
+    rp = _engine_parity_rows()
+    for r in rp:
+        print(f"{r['test']},{r['body']},{r['map']},m={r['m']},"
+              f"err={r['max_abs_err']:.2e}")
     print("# ==== Fig.12/15: energy (modeled) ====")
     re = bench_energy.main()
     print("# ==== §6: general-m (r,beta) ====")
@@ -286,7 +388,7 @@ def main(argv=None) -> None:
     print("# ==== beyond-paper: folded causal attention ====")
     ra = bench_attention.main()
 
-    path = write_maps_artifact(r2 + r3 + rm + rc + rcomp, path=out)
+    path = write_maps_artifact(r2 + r3 + rm + rc + rcomp + rp, path=out)
     validate_artifact(path)
     print(f"# wrote + validated {path}")
 

@@ -1,6 +1,13 @@
-"""Pallas TPU kernels: simplex-test kernels (paper Table 1), the
-simplex-grid causal flash attention, and the MXU batched map (§7.1).
-Validated against ref.py oracles in interpret mode; ops.py holds the
-public jit'd wrappers."""
+"""Pallas TPU kernels for the paper's simplex workloads.
 
-from . import ops, ref
+``engine.py`` is the dimension-generic ``SimplexKernel`` launcher
+(body registry + 3^m halo subsystem, DESIGN.md §2.3); ``legacy.py``
+freezes the original hand-rolled kernels as the differential-parity
+baseline; ``simplex_kernels.py`` holds the deprecated shims over the
+engine.  The simplex-grid causal flash attention and the MXU batched
+map (§7.1) live beside them.  Everything is validated against the
+``ref.py`` oracles in interpret mode; ``ops.py`` holds the public
+jit'd wrappers.
+"""
+
+from . import engine, ops, ref

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .engine import pallas_launch
 from .policy import check_tile_alignment, resolve_interpret
 
 NEG_INF = -1e30
@@ -178,7 +179,7 @@ def flash_attention(
     qr = q.reshape(b * hq, s, d)
     kr = k.reshape(b * hkv, s, d)
     vr = v.reshape(b * hkv, s, d)
-    out = pl.pallas_call(
+    out = pallas_launch(
         kernel,
         out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
         grid=grid,

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.hmap import pow2_floor
 
+from .engine import pallas_launch
 from .policy import resolve_interpret
 
 __all__ = ["hmap2_coords_mxu"]
@@ -73,7 +74,7 @@ def hmap2_coords_mxu(
         o_ref[:, 0] = d[0].astype(jnp.int32)
         o_ref[:, 1] = d[1].astype(jnp.int32)
 
-    return pl.pallas_call(
+    return pallas_launch(
         kernel,
         out_shape=jax.ShapeDtypeStruct((t, 2), jnp.int32),
         grid=(t // 128,),

@@ -21,7 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import engine, ref
 from .compiled import (
     accum2d_compiled,
     accum3d_compiled,
@@ -30,15 +30,6 @@ from .compiled import (
 from .flash_attention import flash_attention
 from .hmap_mxu import hmap2_coords_mxu
 from .policy import default_interpret, resolve_interpret
-from .simplex_kernels import (
-    accum2d,
-    accum3d,
-    accum_md,
-    ca2d,
-    ca3d,
-    edm2d,
-    map2d,
-)
 
 __all__ = [
     "default_interpret",
@@ -49,6 +40,9 @@ __all__ = [
     "simplex_accum3d",
     "simplex_ca3d",
     "simplex_accum_md",
+    "simplex_edm3d",
+    "simplex_edm_md",
+    "simplex_ca_md",
     "simplex_accum2d_compiled",
     "simplex_accum3d_compiled",
     "simplex_accum_md_compiled",
@@ -60,17 +54,20 @@ __all__ = [
 
 @functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
 def simplex_accum2d(x, rho: int = 8, kind: str = "auto", interpret=None):
-    return accum2d(x, rho=rho, kind=kind, interpret=interpret)
+    """+1 on the inclusive lower triangle (engine ACCUM body at m=2)."""
+    return engine.accum(x, rho=rho, kind=kind, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
 def simplex_edm2d(p, rho: int = 8, kind: str = "auto", interpret=None):
-    return edm2d(p, rho=rho, kind=kind, interpret=interpret)
+    """||p_i - p_j|| on the lower triangle (engine EDM body at m=2)."""
+    return engine.edm2d(p, rho=rho, kind=kind, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
 def simplex_ca2d(state, rho: int = 8, kind: str = "auto", interpret=None):
-    return ca2d(state, rho=rho, kind=kind, interpret=interpret)
+    """One periodic GoL step on the triangle (engine CA body at m=2)."""
+    return engine.ca(state, rho=rho, kind=kind, interpret=interpret)
 
 
 @functools.partial(
@@ -79,12 +76,14 @@ def simplex_ca2d(state, rho: int = 8, kind: str = "auto", interpret=None):
 def simplex_accum3d(
     x, rho: int = 4, kind: str = "auto", interpret=None, split=None
 ):
-    return accum3d(x, rho=rho, kind=kind, interpret=interpret, split=split)
+    """+1 on the 3-simplex T(n) (engine ACCUM body at m=3)."""
+    return engine.accum(x, rho=rho, kind=kind, interpret=interpret, split=split)
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
 def simplex_ca3d(state, rho: int = 4, kind: str = "auto", interpret=None):
-    return ca3d(state, rho=rho, kind=kind, interpret=interpret)
+    """One free-boundary GoL step on T(n) (engine CA body at m=3)."""
+    return engine.ca(state, rho=rho, kind=kind, interpret=interpret)
 
 
 @functools.partial(
@@ -94,7 +93,38 @@ def simplex_accum_md(
     x, rho: int = 2, kind: str = "auto", interpret=None, split=None
 ):
     """General-m accumulate; m = x.ndim (DESIGN.md §4)."""
-    return accum_md(x, rho=rho, kind=kind, interpret=interpret, split=split)
+    return engine.accum_md(
+        x, rho=rho, kind=kind, interpret=interpret, split=split
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rho", "kind", "interpret", "split")
+)
+def simplex_edm3d(p, rho: int = 4, kind: str = "auto", interpret=None,
+                  split=None):
+    """Per-cell triangle perimeter on T(n) (engine EDM body at m=3)."""
+    return engine.edm3d(p, rho=rho, kind=kind, interpret=interpret,
+                        split=split)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "rho", "kind", "interpret", "split")
+)
+def simplex_edm_md(p, m: int, rho: int | None = None, kind: str = "auto",
+                   interpret=None, split=None):
+    """General-m EDM: out[c] = sum of pairwise distances of the cell's
+    m points (engine EDM body; m >= 3 — use simplex_edm2d at m=2)."""
+    return engine.edm_md(p, m, rho=rho, kind=kind, interpret=interpret,
+                         split=split)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "kind", "interpret"))
+def simplex_ca_md(state, rho: int | None = None, kind: str = "auto",
+                  interpret=None):
+    """General-m CA: one (3^m - 1)-neighbour GoL step on T(n), free
+    boundaries (engine CA body; m = state.ndim >= 3)."""
+    return engine.ca_md(state, rho=rho, kind=kind, interpret=interpret)
 
 
 # Fused-XLA compiled executors (kernels/compiled.py): the whole schedule
@@ -130,6 +160,6 @@ def hmap_coords_mxu(wxy, rho: int = 1, interpret=None):
     return hmap2_coords_mxu(wxy, rho=rho, interpret=interpret)
 
 
-def map_table(nb: int, kind: str = "hmap"):
-    """The MAP test's output: (steps, 3) coordinate table."""
-    return map2d(nb, kind)
+def map_table(nb: int, kind: str = "hmap", m: int = 2):
+    """The MAP test's output: (steps, m+1) coordinate table."""
+    return engine.map_table(nb, m=m, kind=kind)

@@ -18,6 +18,11 @@ __all__ = [
     "tetra_mask",
     "accum3d",
     "ca3d_step",
+    "simplex_mask",
+    "accum_md",
+    "edm3d",
+    "edm_md",
+    "ca_md_step",
     "causal_attention",
     "map_table_2d",
 ]
@@ -102,6 +107,87 @@ def ca3d_step(state: jax.Array) -> jax.Array:
     born = (s == 0) & (neigh == 3)
     survive = (s == 1) & ((neigh == 2) | (neigh == 3))
     return ((born | survive).astype(state.dtype)) * m
+
+
+def simplex_mask(m: int, n: int, dtype=jnp.bool_):
+    """The m-simplex domain mask in array-axis order.
+
+    m=2 is the paper's inclusive lower triangle {col <= row}; m >= 3 is
+    the strict simplex {sum(coords) < n} (``tetra_mask`` at m=3).  The
+    per-cell sum is symmetric in the coordinates, so math order vs
+    array-axis order is immaterial for m >= 3.
+    """
+    if m == 2:
+        return tril_mask(n, dtype)
+    r = jnp.arange(n)
+    s = jnp.zeros((n,) * m, jnp.int32)
+    for ax in range(m):
+        shape = [1] * m
+        shape[ax] = n
+        s = s + r.reshape(shape)
+    return (s < n).astype(dtype)
+
+
+def accum_md(x: jax.Array) -> jax.Array:
+    """General-m ACCUM oracle (m = x.ndim): +1 on the simplex, 0 off it
+    (``accum2d``/``accum3d`` are the m=2/m=3 instances)."""
+    m = x.ndim
+    n = x.shape[0]
+    return (x + 1) * simplex_mask(m, n, x.dtype)
+
+
+def edm_md(p: jax.Array, m: int) -> jax.Array:
+    """General-m EDM oracle: per-cell sum of pairwise point distances.
+
+    ``out[c] = sum_{a < b} ||p[c_a] - p[c_b]||`` over the m coordinates
+    of each simplex cell, 0 off the domain.  At m=2 this is exactly
+    ``edm2d`` (a single pair); at m=3 each cell holds the perimeter of
+    the triangle (p[i], p[j], p[k]).  The pair sum is symmetric under
+    any coordinate permutation, so axis order is immaterial.
+    """
+    n = p.shape[0]
+    d2 = jnp.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
+    d = jnp.sqrt(d2.astype(jnp.float32))
+    out = jnp.zeros((n,) * m, jnp.float32)
+    for i in range(m):
+        for j in range(i + 1, m):
+            rest = tuple(k for k in range(m) if k not in (i, j))
+            out = out + jnp.expand_dims(d, rest)
+    msk = simplex_mask(m, n, jnp.float32)
+    return (out * msk).astype(p.dtype)
+
+
+def edm3d(p: jax.Array) -> jax.Array:
+    """EDM3D oracle — per-cell triangle perimeter on T(n)."""
+    return edm_md(p, 3)
+
+
+def ca_md_step(state: jax.Array) -> jax.Array:
+    """General-m CA oracle (m = state.ndim >= 3): one (3^m - 1)-neighbour
+    B3/S23 step on the simplex with free boundaries (``ca3d_step`` is
+    the m=3 instance; the 2-simplex wraps — use ``ca2d_step``)."""
+    m = state.ndim
+    assert m >= 3, "the 2-simplex CA is periodic — use ca2d_step"
+    n = state.shape[0]
+    msk = simplex_mask(m, n, state.dtype)
+    s = state * msk
+    pad = jnp.pad(s, 1)
+    neigh = jnp.zeros_like(s)
+    for shift in _offsets(m):
+        if all(d == 0 for d in shift):
+            continue
+        sl = tuple(slice(1 + d, 1 + d + n) for d in shift)
+        neigh = neigh + pad[sl]
+    born = (s == 0) & (neigh == 3)
+    survive = (s == 1) & ((neigh == 2) | (neigh == 3))
+    return ((born | survive).astype(state.dtype)) * msk
+
+
+def _offsets(m: int):
+    """All 3^m offset vectors in {-1, 0, 1}^m."""
+    import itertools
+
+    return itertools.product((-1, 0, 1), repeat=m)
 
 
 def causal_attention(q, k, v, scale: float | None = None):

@@ -1,59 +1,43 @@
-"""Pallas TPU kernels for the paper's four tests (Table 1) on simplex domains.
+"""Deprecated per-(body, dimension) kernel entry points.
 
-All kernels draw their grid walk from the unified
-``core.schedule.SimplexSchedule`` subsystem (DESIGN.md §2.2); the
-``kind`` argument selects the registered schedule for the kernel's
-dimension:
+.. deprecated::
+    Every function here is a thin shim over the dimension-generic
+    ``SimplexKernel`` engine (``kernels/engine.py``, DESIGN.md §2.3),
+    kept so existing imports keep working — each call emits a
+    ``DeprecationWarning`` and delegates to the engine:
 
-* ``kind='hmap'`` — the paper's block-space map as the ``BlockSpec``
-  index_map: zero waste for the 2-simplex, the recursive orthant map
-  for m >= 3 (~n^3/5 grid at m=3).
-* ``kind='rb'``   — rectangular-box fold [37] (2-simplex only).
-* ``kind='bb'``   — bounding box: full grid + per-tile discard,
-  the baseline the paper speeds up against.
-* ``kind='table'`` — scalar-prefetch coordinate table (the
-  TPU-idiomatic exact form, zero waste for any n; m >= 3 kernels
-  only — the 2D kernels launch a (w, h) grid); m=3 also keeps
-  ``kind='octant'`` as a named alias of the recursion.
-* ``kind='composite'`` — the general-n analytical decomposition
-  (DESIGN.md §4.2): pow2 core + shell pieces in one linear grid, pure
-  index arithmetic (no prefetch payload).  This is what ``'hmap'``
-  resolves to for non-pow2 n at m >= 3, so the m >= 3 kernels serve
-  arbitrary n without the O(V) host-side table build.
+    ========================  =======================================
+    legacy entry point        engine replacement
+    ========================  =======================================
+    ``map2d(nb, ...)``        ``engine.map_table(nb, m=2, ...)``
+    ``accum2d(x, ...)``       ``engine.accum(x, ...)``
+    ``edm2d(p, ...)``         ``engine.edm2d(p, ...)``
+    ``ca2d(state, ...)``      ``engine.ca(state, ...)``
+    ``accum3d(x, ...)``       ``engine.accum(x, ...)``
+    ``ca3d(state, ...)``      ``engine.ca(state, ...)``
+    ``accum_md(x, ...)``      ``engine.accum_md(x, ...)``
+    ``grid_steps_2d(nb, k)``  ``engine.grid_steps(nb, k, m=2)``
+    ``grid_steps_3d(nb, k)``  ``engine.grid_steps(nb, k, m=3)``
+    ========================  =======================================
 
-``accum_md`` extends the ACCUM test to arbitrary m (the first consumer
-of the m >= 4 schedules).
+    Signatures, defaults, and outputs are unchanged (the differential
+    suite ``tests/test_engine_parity.py`` pins engine-vs-legacy parity
+    bit for bit against the frozen originals in ``kernels/legacy.py``).
+    One behavioral *extension*: the engine serves linear-grid kinds
+    (``table`` / ``composite``) at m=2 too, so the old "2D kernels
+    launch a (w, h) grid" ``ValueError`` is gone.
 
-Execution mode is resolved per backend by ``kernels/policy.py`` (no
-``pallas_call`` here hardcodes ``interpret=True`` anymore): every kernel
-takes ``interpret: bool | None = None`` — None resolves through
-``policy.default_interpret()`` (CPU interprets, TPU/GPU compile the
-index_maps; ``REPRO_INTERPRET=1`` forces the old behavior).  On the
-compiled path block shapes must satisfy the 8x128 Mosaic tiling
-(``policy.check_tile_alignment``); tests use small rho under interpret.
-
-``kind='composite'`` schedules with many pieces can additionally be
-*split* into one ``pallas_call`` per piece (``split=`` argument on the
-accumulate kernels): each launch decodes only its own factor chain
-instead of the O(pieces) select chain, at the cost of one launch per
-piece — ``repro.autotune.should_split_pieces`` decides the default.
-
-TPU notes: tiles are (rho, rho) with rho a multiple of the 8x128-friendly
-sizes in production (tests use small rho under interpret=True; the grid /
-BlockSpec structure is identical).  Out-of-domain grid steps write to a
-dedicated trash tile appended to the output so no live data is clobbered
-by Pallas' end-of-step block flush.
+New workloads should register a body with the engine instead of adding
+functions here (see ``engine.register_body`` / DESIGN.md §2.3).
 """
 
 from __future__ import annotations
 
+import warnings
+
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core.schedule import SimplexSchedule, resolve_kind
-
-from .policy import check_tile_alignment, resolve_interpret
+from . import engine
 
 __all__ = [
     "map2d",
@@ -68,69 +52,23 @@ __all__ = [
 ]
 
 
-# ---------------------------------------------------------------------------
-# schedule plumbing — all kernels consume the unified SimplexSchedule
-# subsystem (core/schedule.py); resolve_kind applies the kernel-facing
-# non-pow2 fallbacks (hmap -> rb/bb for m=2, hmap/octant -> composite
-# for m >= 3).
-# ---------------------------------------------------------------------------
-
-
-def _schedule(m: int, nb: int, kind: str) -> SimplexSchedule:
-    if m == 2 and kind in ("table", "composite"):
-        raise ValueError(
-            f"the 2D kernels launch a (w, h) grid; kind={kind!r} (linear "
-            "walk) is only wired for the m >= 3 kernels — use kind='hmap', "
-            "'rb', or 'bb'"
-        )
-    return SimplexSchedule(m, nb, resolve_kind(m, nb, kind))
-
-
-def grid_steps_2d(nb: int, kind: str) -> int:
-    return _schedule(2, nb, kind).steps
-
-
-# ---------------------------------------------------------------------------
-# MAP — mapping stage only (paper's theoretical-speedup microbenchmark).
-# Writes the computed (x, y) of CHUNK consecutive grid blocks per step so
-# the map cannot be elided (the CUDA version uses volatile for this).
-# ---------------------------------------------------------------------------
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.kernels.simplex_kernels.{old} is deprecated; use "
+        f"repro.kernels.engine.{new} (the dimension-generic SimplexKernel "
+        "engine) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def map2d(
     nb: int, kind: str = "hmap", chunk: int = 128, interpret: bool | None = None
 ) -> jax.Array:
-    """Returns (steps, 3) int32: (x, y, valid) per grid step."""
-    interpret = resolve_interpret(interpret)
-    sched = _schedule(2, nb, kind)
-    (w, h), fn = sched.grid, sched.map
-    steps = sched.steps
-    padded = ((steps + chunk - 1) // chunk) * chunk
-
-    def kernel(o_ref):
-        i = pl.program_id(0)
-        lin = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)[:, 0]
-        lin = jnp.minimum(lin, steps - 1)
-        wy = lin // w
-        wx = lin - wy * w
-        x, y, v = fn(wx, wy)
-        o_ref[:, 0] = x.astype(jnp.int32)
-        o_ref[:, 1] = y.astype(jnp.int32)
-        o_ref[:, 2] = v.astype(jnp.int32)
-
-    out = pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct((padded, 3), jnp.int32),
-        grid=(padded // chunk,),
-        out_specs=pl.BlockSpec((chunk, 3), lambda i: (i, 0)),
-        interpret=interpret,
-    )()
-    return out[:steps]
-
-
-# ---------------------------------------------------------------------------
-# ACCUM — +1 on each simplex element (memory-bound test)
-# ---------------------------------------------------------------------------
+    """Deprecated: ``engine.map_table(nb, m=2, ...)`` — (steps, 3) int32
+    (x, y, valid) rows of the 2-simplex schedule walk."""
+    _warn("map2d", "map_table")
+    return engine.map_table(nb, m=2, kind=kind, chunk=chunk, interpret=interpret)
 
 
 def accum2d(
@@ -139,47 +77,10 @@ def accum2d(
     kind: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """+1 on the inclusive lower triangle of x (n x n, rho | n).
-
-    Untouched (out-of-domain) tiles keep their input value via
-    input/output aliasing — in-place semantics like the CUDA original.
-    """
-    n = x.shape[0]
-    assert x.shape == (n, n) and n % rho == 0
-    interpret = resolve_interpret(interpret)
-    check_tile_alignment((rho, rho), interpret)
-    nb = n // rho
-    sched = _schedule(2, nb, kind)
-    (w, h), fn = sched.grid, sched.map
-
-    def in_map(wx, wy):
-        xx, yy, v = fn(wx, wy)
-        return yy, xx  # (row-block, col-block)
-
-    def kernel(x_ref, o_ref):
-        wx, wy = pl.program_id(0), pl.program_id(1)
-        xb, yb, valid = fn(wx, wy)
-        row0 = yb * rho
-        col0 = xb * rho
-        r = row0 + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
-        c = col0 + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
-        tri = (c <= r) & valid
-        o_ref[...] = jnp.where(tri, x_ref[...] + 1, x_ref[...])
-
-    return pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        grid=(w, h),
-        in_specs=[pl.BlockSpec((rho, rho), in_map)],
-        out_specs=pl.BlockSpec((rho, rho), in_map),
-        input_output_aliases={0: 0},
-        interpret=interpret,
-    )(x)
-
-
-# ---------------------------------------------------------------------------
-# EDM — Euclidean distance matrix (arithmetic-heavy test)
-# ---------------------------------------------------------------------------
+    """Deprecated: ``engine.accum(x, ...)`` — +1 on the inclusive lower
+    triangle of x (n x n, rho | n), in-place semantics via aliasing."""
+    _warn("accum2d", "accum")
+    return engine.accum(x, rho=rho, kind=kind, interpret=interpret)
 
 
 def edm2d(
@@ -188,63 +89,10 @@ def edm2d(
     kind: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """out[i, j] = ||p_i - p_j|| on the inclusive lower triangle.
-
-    p: (n, d).  Out-of-domain tiles are written 0 via a zeros-aliased
-    output (H/RB schedules never visit them; BB writes zeros there).
-    """
-    n, d = p.shape
-    assert n % rho == 0
-    interpret = resolve_interpret(interpret)
-    check_tile_alignment((rho, rho), interpret)
-    nb = n // rho
-    sched = _schedule(2, nb, kind)
-    (w, h), fn = sched.grid, sched.map
-
-    def rows_map(wx, wy):
-        _, yy, _ = fn(wx, wy)
-        return yy, 0
-
-    def cols_map(wx, wy):
-        xx, _, _ = fn(wx, wy)
-        return xx, 0
-
-    def out_map(wx, wy):
-        xx, yy, _ = fn(wx, wy)
-        return yy, xx
-
-    def kernel(pr_ref, pc_ref, z_ref, o_ref):
-        del z_ref  # zeros input present only for output aliasing
-        wx, wy = pl.program_id(0), pl.program_id(1)
-        xb, yb, valid = fn(wx, wy)
-        pr = pr_ref[...].astype(jnp.float32)  # (rho, d) query rows
-        pc = pc_ref[...].astype(jnp.float32)  # (rho, d) cols
-        d2 = jnp.sum((pr[:, None, :] - pc[None, :, :]) ** 2, axis=-1)
-        dist = jnp.sqrt(d2)
-        r = yb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
-        c = xb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
-        tri = (c <= r) & valid
-        o_ref[...] = jnp.where(tri, dist, 0.0).astype(o_ref.dtype)
-
-    zeros = jnp.zeros((n, n), dtype=p.dtype)
-    return pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct((n, n), p.dtype),
-        grid=(w, h),
-        in_specs=[
-            pl.BlockSpec((rho, d), rows_map),
-            pl.BlockSpec((rho, d), cols_map),
-            pl.BlockSpec((rho, rho), out_map),
-        ],
-        out_specs=pl.BlockSpec((rho, rho), out_map),
-        input_output_aliases={2: 0},
-        interpret=interpret,
-    )(p, p, zeros)
-
-
-# ---------------------------------------------------------------------------
-# CA2D — game of life on the triangle, periodic wrap (memory-bound, halos)
-# ---------------------------------------------------------------------------
+    """Deprecated: ``engine.edm2d(p, ...)`` — ||p_i - p_j|| on the
+    inclusive lower triangle, 0 elsewhere."""
+    _warn("edm2d", "edm2d")
+    return engine.edm2d(p, rho=rho, kind=kind, interpret=interpret)
 
 
 def ca2d(
@@ -253,125 +101,10 @@ def ca2d(
     kind: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One GoL step on the inclusive lower triangle (periodic underlying
-    square).  Nine shifted input refs provide the halo — the standard
-    Pallas stencil pattern (no element-offset reads on TPU)."""
-    n = state.shape[0]
-    assert state.shape == (n, n) and n % rho == 0
-    interpret = resolve_interpret(interpret)
-    check_tile_alignment((rho, rho), interpret)
-    nb = n // rho
-    sched = _schedule(2, nb, kind)
-    (w, h), fn = sched.grid, sched.map
-
-    shifts = [(dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
-
-    def make_map(dy, dx):
-        def m(wx, wy):
-            xx, yy, _ = fn(wx, wy)
-            return (yy + dy) % nb, (xx + dx) % nb
-
-        return m
-
-    def out_map(wx, wy):
-        xx, yy, _ = fn(wx, wy)
-        return yy, xx
-
-    def kernel(*refs):
-        in_refs = refs[:9]
-        o_ref = refs[9]
-        wx, wy = pl.program_id(0), pl.program_id(1)
-        xb, yb, valid = fn(wx, wy)
-
-        def tri_of(tile_yb, tile_xb, arr):
-            r = tile_yb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
-            c = tile_xb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
-            return jnp.where(c <= r, arr, 0)
-
-        # assemble (3*rho, 3*rho) neighbourhood, each tile masked by the
-        # triangle predicate of ITS OWN (wrapped) position — matching the
-        # jnp.roll-of-masked-state reference semantics.
-        rowsl = []
-        for dy in (-1, 0, 1):
-            row = []
-            for dx in (-1, 0, 1):
-                i = shifts.index((dy, dx))
-                t = in_refs[i][...]
-                row.append(tri_of((yb + dy) % nb, (xb + dx) % nb, t))
-            rowsl.append(jnp.concatenate(row, axis=1))
-        big = jnp.concatenate(rowsl, axis=0)  # (3rho, 3rho)
-        centre = big[rho : 2 * rho, rho : 2 * rho]
-        neigh = jnp.zeros((rho, rho), dtype=big.dtype)
-        for dy in (-1, 0, 1):
-            for dx in (-1, 0, 1):
-                if dx == 0 and dy == 0:
-                    continue
-                neigh = neigh + big[
-                    rho + dy : 2 * rho + dy, rho + dx : 2 * rho + dx
-                ]
-        born = (centre == 0) & (neigh == 3)
-        survive = (centre == 1) & ((neigh == 2) | (neigh == 3))
-        new = (born | survive).astype(o_ref.dtype)
-        r = yb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 0)
-        c = xb * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho), 1)
-        tri = (c <= r) & valid
-        o_ref[...] = jnp.where(tri, new, in_refs[4][...])
-
-    return pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
-        grid=(w, h),
-        in_specs=[pl.BlockSpec((rho, rho), make_map(dy, dx)) for dy, dx in shifts],
-        out_specs=pl.BlockSpec((rho, rho), out_map),
-        input_output_aliases={4: 0},  # centre ref aliases the output
-        interpret=interpret,
-    )(*([state] * 9))
-
-
-# ---------------------------------------------------------------------------
-# 3-simplex schedules
-# ---------------------------------------------------------------------------
-
-
-def _sched_linear(m: int, nb: int, kind: str):
-    """Returns (steps, map_fn, table) from the SimplexSchedule subsystem —
-    map_fn: (lin[, tab_ref]) -> (*coords, valid).
-
-    ``table`` is the schedule's scalar-prefetch payload when the walk is
-    table-driven (the TPU-idiomatic exact form: the index map reads m
-    int32s from SMEM per grid step), else None and the map is pure index
-    arithmetic.
-    """
-    sched = _schedule(m, nb, kind)
-    return sched.steps, sched.map, sched.prefetch
-
-
-def _launch_plan(m: int, nb: int, kind: str, split: bool | None = None):
-    """[(steps, map_fn, table)] — one entry per ``pallas_call`` launch.
-
-    Composite schedules pay O(pieces) selects per grid step inside the
-    branchless map; when that chain dominates (many pieces, enough
-    steps to amortize per-launch overhead — see
-    ``repro.autotune.should_split_pieces``) the schedule is split into
-    one launch per piece, each decoding only its own factor chain.
-    Splitting is only used by the element-local accumulate kernels:
-    pieces cover disjoint tiles, so chaining launches through the
-    aliased output is exact.  ``split`` forces the decision either way.
-    """
-    sched = _schedule(m, nb, kind)
-    if sched.kind == "composite":
-        subs = sched.split_pieces()
-        if split is None:
-            from repro.autotune import should_split_pieces
-
-            split = should_split_pieces(len(subs), sched.steps)
-        if split and len(subs) > 1:
-            return [(s.steps, s.map, None) for s in subs]
-    return [(sched.steps, sched.map, sched.prefetch)]
-
-
-def grid_steps_3d(nb: int, kind: str) -> int:
-    return _schedule(3, nb, kind).steps
+    """Deprecated: ``engine.ca(state, ...)`` — one GoL step on the
+    inclusive lower triangle (periodic underlying square)."""
+    _warn("ca2d", "ca")
+    return engine.ca(state, rho=rho, kind=kind, interpret=interpret)
 
 
 def accum3d(
@@ -381,73 +114,10 @@ def accum3d(
     interpret: bool | None = None,
     split: bool | None = None,
 ) -> jax.Array:
-    """+1 on T(n) = {x+y+z < n}; axes (z, y, x); rho | n."""
-    n = x.shape[0]
-    assert x.shape == (n, n, n) and n % rho == 0
-    interpret = resolve_interpret(interpret)
-    check_tile_alignment((rho, rho, rho), interpret)
-    nb = n // rho
-
-    xp = jnp.concatenate([x, jnp.zeros((rho, n, n), x.dtype)], axis=0)
-    for steps, fn, table in _launch_plan(3, nb, kind, split):
-
-        def in_map(i, *pref, fn=fn):
-            bx, by, bz, v = fn(i, *pref)
-            # invalid steps park on the trash tile (last z block of padding)
-            bz = jnp.where(v, bz, nb)
-            return bz, by, bx
-
-        def kernel(*refs, fn=fn, table=table):
-            if table is not None:
-                tab_ref, x_ref, o_ref = refs
-                pref = (tab_ref,)
-            else:
-                x_ref, o_ref = refs
-                pref = ()
-            i = pl.program_id(0)
-            bx, by, bz, valid = fn(i, *pref)
-            gz = bz * rho + jax.lax.broadcasted_iota(
-                jnp.int32, (rho, rho, rho), 0
-            )
-            gy = by * rho + jax.lax.broadcasted_iota(
-                jnp.int32, (rho, rho, rho), 1
-            )
-            gx = bx * rho + jax.lax.broadcasted_iota(
-                jnp.int32, (rho, rho, rho), 2
-            )
-            tet_m = ((gx + gy + gz) < n) & valid
-            o_ref[...] = jnp.where(tet_m, x_ref[...] + 1, x_ref[...])
-
-        grid_spec, args = _grid_spec(
-            table, steps, [pl.BlockSpec((rho, rho, rho), in_map)],
-            pl.BlockSpec((rho, rho, rho), in_map),
-        )
-        xp = pl.pallas_call(
-            kernel,
-            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
-            grid_spec=grid_spec,
-            input_output_aliases={len(args): 0},
-            interpret=interpret,
-        )(*args, xp)
-    return xp[:n]
-
-
-def _grid_spec(table, steps, in_specs, out_specs):
-    """Plain grid or scalar-prefetch grid, matching the schedule kind."""
-    if table is None:
-        return (
-            pl.GridSpec(grid=(steps,), in_specs=in_specs, out_specs=out_specs),
-            (),
-        )
-    from jax.experimental.pallas import tpu as pltpu
-
-    spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(steps,),
-        in_specs=in_specs,
-        out_specs=out_specs,
-    )
-    return spec, (jnp.asarray(table),)
+    """Deprecated: ``engine.accum(x, ...)`` — +1 on T(n) = {x+y+z < n};
+    axes (z, y, x); rho | n."""
+    _warn("accum3d", "accum")
+    return engine.accum(x, rho=rho, kind=kind, interpret=interpret, split=split)
 
 
 def ca3d(
@@ -456,110 +126,10 @@ def ca3d(
     kind: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One 26-neighbour GoL step on T(n), free boundaries.
-
-    27 shifted input refs (clamped at the domain edge; the true-coordinate
-    mask zeroes out-of-range contributions, so clamp duplicates are inert).
-    Always a single launch — the halo reads make per-piece chaining
-    unsound (a split piece would read neighbours already stepped).
-    """
-    n = state.shape[0]
-    assert state.shape == (n, n, n) and n % rho == 0
-    interpret = resolve_interpret(interpret)
-    check_tile_alignment((rho, rho, rho), interpret)
-    nb = n // rho
-    steps, fn, table = _sched_linear(3, nb, kind)
-    shifts = [
-        (dz, dy, dx) for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
-    ]
-
-    def make_map(dz, dy, dx):
-        def m(i, *pref):
-            bx, by, bz, v = fn(i, *pref)
-            bz2 = jnp.clip(bz + dz, 0, nb - 1)
-            by2 = jnp.clip(by + dy, 0, nb - 1)
-            bx2 = jnp.clip(bx + dx, 0, nb - 1)
-            return jnp.where(v, bz2, nb), by2, bx2
-
-        return m
-
-    def out_map(i, *pref):
-        bx, by, bz, v = fn(i, *pref)
-        return jnp.where(v, bz, nb), by, bx
-
-    centre_idx = shifts.index((0, 0, 0))
-
-    def kernel(*refs):
-        if table is not None:
-            pref = (refs[0],)
-            refs = refs[1:]
-        else:
-            pref = ()
-        in_refs = refs[:27]
-        o_ref = refs[27]
-        i = pl.program_id(0)
-        bx, by, bz, valid = fn(i, *pref)
-
-        big = jnp.zeros((3 * rho, 3 * rho, 3 * rho), dtype=state.dtype)
-        for si, (dz, dy, dx) in enumerate(shifts):
-            t = in_refs[si][...]
-            # mask by the TRUE coordinates of this halo tile
-            gz = (bz + dz) * rho + jax.lax.broadcasted_iota(
-                jnp.int32, (rho, rho, rho), 0
-            )
-            gy = (by + dy) * rho + jax.lax.broadcasted_iota(
-                jnp.int32, (rho, rho, rho), 1
-            )
-            gx = (bx + dx) * rho + jax.lax.broadcasted_iota(
-                jnp.int32, (rho, rho, rho), 2
-            )
-            ok = (
-                (gz >= 0) & (gz < n) & (gy >= 0) & (gy < n) & (gx >= 0) & (gx < n)
-                & ((gx + gy + gz) < n)
-            )
-            t = jnp.where(ok, t, 0)
-            big = jax.lax.dynamic_update_slice(
-                big, t, ((dz + 1) * rho, (dy + 1) * rho, (dx + 1) * rho)
-            )
-        centre = big[rho : 2 * rho, rho : 2 * rho, rho : 2 * rho]
-        neigh = jnp.zeros((rho, rho, rho), dtype=big.dtype)
-        for dz, dy, dx in shifts:
-            if dz == dy == dx == 0:
-                continue
-            neigh = neigh + jax.lax.dynamic_slice(
-                big, (rho + dz, rho + dy, rho + dx), (rho, rho, rho)
-            )
-        born = (centre == 0) & (neigh == 3)
-        survive = (centre == 1) & ((neigh == 2) | (neigh == 3))
-        new = (born | survive).astype(o_ref.dtype)
-        gz = bz * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 0)
-        gy = by * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 1)
-        gx = bx * rho + jax.lax.broadcasted_iota(jnp.int32, (rho, rho, rho), 2)
-        tet_m = ((gx + gy + gz) < n) & valid
-        o_ref[...] = jnp.where(tet_m, new, in_refs[centre_idx][...])
-
-    sp = jnp.concatenate([state, jnp.zeros((rho, n, n), state.dtype)], axis=0)
-    grid_spec, args = _grid_spec(
-        table,
-        steps,
-        [pl.BlockSpec((rho, rho, rho), make_map(*s)) for s in shifts],
-        pl.BlockSpec((rho, rho, rho), out_map),
-    )
-    out = pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct(sp.shape, state.dtype),
-        grid_spec=grid_spec,
-        input_output_aliases={len(args) + centre_idx: 0},
-        interpret=interpret,
-    )(*args, *([sp] * 27))
-    return out[:n]
-
-
-# ---------------------------------------------------------------------------
-# ACCUM_MD — +1 on each cell of the general m-simplex (the first kernel
-# driven by the m >= 4 schedules: 'table' exact walk or the 'hmap'
-# orthant recursion).  Interpret-mode validated at m=4 in tests.
-# ---------------------------------------------------------------------------
+    """Deprecated: ``engine.ca(state, ...)`` — one 26-neighbour GoL step
+    on T(n), free boundaries."""
+    _warn("ca3d", "ca")
+    return engine.ca(state, rho=rho, kind=kind, interpret=interpret)
 
 
 def accum_md(
@@ -569,64 +139,21 @@ def accum_md(
     interpret: bool | None = None,
     split: bool | None = None,
 ) -> jax.Array:
-    """+1 on T(n) = {sum(coords) < n} for an m-cube input of shape (n,)*m.
-
-    m is taken from ``x.ndim`` (any m >= 3 — the linear-grid walks; the
-    2-simplex has dedicated kernels above).  The walk comes from
-    ``SimplexSchedule(m, n/rho, kind)``; schedule coordinates are in math
-    order (x_0 fastest) and array axis j holds x_{m-1-j}, matching the
-    3D kernels' (z, y, x) layout.  Out-of-domain grid steps park on a
-    trash tile appended along axis 0; untouched tiles keep their input
-    value via aliasing (in-place semantics).  Composite schedules may be
-    split into one launch per piece (``split``; see ``_launch_plan``).
-    """
-    m = x.ndim
-    assert m >= 3, "use accum2d for the 2-simplex (its grid is (w, h))"
-    n = x.shape[0]
-    assert all(s == n for s in x.shape) and n % rho == 0
-    interpret = resolve_interpret(interpret)
-    check_tile_alignment((rho,) * m, interpret)
-    nb = n // rho
-
-    xp = jnp.concatenate(
-        [x, jnp.zeros((rho,) + x.shape[1:], x.dtype)], axis=0
+    """Deprecated: ``engine.accum_md(x, ...)`` — +1 on T(n) =
+    {sum(coords) < n} for an m-cube input (m = x.ndim >= 3)."""
+    _warn("accum_md", "accum_md")
+    return engine.accum_md(
+        x, rho=rho, kind=kind, interpret=interpret, split=split
     )
-    for steps, fn, table in _launch_plan(m, nb, kind, split):
 
-        def blocks_of(i, pref, fn=fn):
-            out = fn(i, *pref)
-            coords, v = out[:-1], out[-1]
-            return tuple(coords[::-1]), v  # axis order: axis 0 = x_{m-1}
 
-        def in_map(i, *pref, blocks_of=blocks_of):
-            blocks, v = blocks_of(i, pref)
-            return (jnp.where(v, blocks[0], nb),) + blocks[1:]
+def grid_steps_2d(nb: int, kind: str) -> int:
+    """Deprecated: ``engine.grid_steps(nb, kind, m=2)``."""
+    _warn("grid_steps_2d", "grid_steps")
+    return engine.grid_steps(nb, kind, m=2)
 
-        def kernel(*refs, blocks_of=blocks_of, table=table):
-            if table is not None:
-                pref = (refs[0],)
-                refs = refs[1:]
-            else:
-                pref = ()
-            x_ref, o_ref = refs
-            i = pl.program_id(0)
-            blocks, valid = blocks_of(i, pref)
-            shape = (rho,) * m
-            gsum = jnp.zeros(shape, jnp.int32)
-            for ax in range(m):
-                gsum = gsum + blocks[ax] * rho + jax.lax.broadcasted_iota(
-                    jnp.int32, shape, ax
-                )
-            mask = (gsum < n) & valid
-            o_ref[...] = jnp.where(mask, x_ref[...] + 1, x_ref[...])
 
-        spec = pl.BlockSpec((rho,) * m, in_map)
-        grid_spec, args = _grid_spec(table, steps, [spec], spec)
-        xp = pl.pallas_call(
-            kernel,
-            out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
-            grid_spec=grid_spec,
-            input_output_aliases={len(args): 0},
-            interpret=interpret,
-        )(*args, xp)
-    return xp[:n]
+def grid_steps_3d(nb: int, kind: str) -> int:
+    """Deprecated: ``engine.grid_steps(nb, kind, m=3)``."""
+    _warn("grid_steps_3d", "grid_steps")
+    return engine.grid_steps(nb, kind, m=3)

@@ -1,3 +1,20 @@
 """Shared pytest config.  NOTE: device count is NOT forced here — smoke
 tests see 1 device; multi-device tests skip unless the session provides
 devices (scripts/run_tests.sh runs the sharding module with XLA_FLAGS)."""
+
+import pytest
+
+
+def require_dev_extra(name: str):
+    """Dev-extra gate: skip the calling module unless ``name`` imports.
+
+    Property-test modules (hypothesis-driven) call this at import time so
+    the deterministic suites stay runnable on minimal installs::
+
+        hyp = require_dev_extra("hypothesis")
+    """
+    return pytest.importorskip(
+        name,
+        reason=f"{name} is a dev extra (pip install -e '.[dev]'); "
+        "the deterministic equivalents run in the non-property suites",
+    )

@@ -215,3 +215,30 @@ def test_no_hardcoded_interpret_true_in_kernels():
                     isinstance(kw.value, ast.Constant)
                     and kw.value.value is True
                 ), f"{py.name}:{node.lineno} hardcodes interpret=True"
+
+
+def test_no_pallas_call_outside_engine_and_compiled():
+    """`pl.pallas_call` is constructed only by the engine's
+    ``pallas_launch`` front door (and the fused-XLA module, which owns
+    its own jit programs) — every other kernel module must launch
+    through ``engine.pallas_launch`` so the execution policy cannot be
+    bypassed."""
+    import ast
+    import pathlib
+
+    allowed = {"engine.py", "compiled.py"}
+    pkg = pathlib.Path(K.__file__).parent
+    offenders = []
+    for py in pkg.glob("*.py"):
+        if py.name in allowed:
+            continue
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+                offenders.append(f"{py.name}:{node.lineno}")
+            if isinstance(node, ast.Name) and node.id == "pallas_call":
+                offenders.append(f"{py.name}:{node.lineno}")
+    assert not offenders, (
+        "pallas_call constructed outside engine.py/compiled.py — route "
+        f"through engine.pallas_launch: {offenders}"
+    )

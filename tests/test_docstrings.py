@@ -28,3 +28,10 @@ def test_autotune_doctests(monkeypatch):
     monkeypatch.delenv("REPRO_SPLIT_PIECES", raising=False)
     result = doctest.testmod(repro.autotune.tuner, verbose=False)
     assert result.failed == 0 and result.attempted > 0
+
+
+def test_engine_doctests():
+    import repro.kernels.engine
+
+    result = doctest.testmod(repro.kernels.engine, verbose=False)
+    assert result.failed == 0 and result.attempted > 0
