@@ -208,6 +208,11 @@ def _engine_parity_rows(quick: bool = False):
             if m in (2, 3) and has_legacy:
                 ca_base = {2: Leg.ca2d, 3: Leg.ca3d}[m](s, rho=rho, kind=kind)
                 exact = True
+            elif m == 2:
+                # no legacy baseline for this kind; periodic 2-simplex oracle
+                ca_base = jnp.where(Ref.simplex_mask(m, n),
+                                    Ref.ca2d_step(s), s)
+                exact = True
             else:
                 ca_base = jnp.where(Ref.simplex_mask(m, n),
                                     Ref.ca_md_step(s), s)
@@ -236,6 +241,87 @@ def _engine_parity_rows(quick: bool = False):
                     "m": m, "n": n, "grid_steps": sched_steps,
                     "max_abs_err": err,
                 })
+    return rows
+
+
+def _shard_rows(quick: bool = False):
+    """SHARD_SKEW section: fold-partition balance + sharded bit-exactness.
+
+    For each (m, n, kind, shards) cell, record the fold partition's
+    block-volume skew (max/mean shard steps — bounded by 1 + k/S, the
+    information-theoretic optimum) next to the naive equal-thickness
+    slab baseline (~m x), plus ``bit_exact`` for the cells where the
+    sharded CA is actually executed against the single-device engine
+    (DESIGN.md §7).  A sharded-CA mismatch aborts the run.  Runs the
+    same under 1 or k devices — with >= ``shards`` devices the engine
+    launches are placed round-robin on a real mesh
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in CI).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.schedule import SimplexSchedule, resolve_kind
+    from repro.distributed.simplex_sharding import (
+        shard_mesh, shard_skew, sharded_ca, slab_skew,
+    )
+    from repro.kernels import ref as Ref
+    from repro.kernels.engine import default_rho
+    from repro.kernels.ops import simplex_ca2d, simplex_ca_md
+
+    # skew cells are analytic (O(1)); CA bit-exactness runs on the
+    # moderate cells where interpret-mode Pallas stays fast.
+    skew_ns = {2: [64, 128, 256] if quick else [64, 128, 192, 256],
+               3: [16, 32, 64] if quick else [16, 32, 64, 128]}
+    ca_cells = ({(2, 64), (3, 16), (3, 32)} if quick
+                else {(2, 64), (3, 16), (3, 32)})
+    rows = []
+    for m, ns in skew_ns.items():
+        rho = default_rho(m)
+        for n in ns:
+            nb = n // rho
+            kind = resolve_kind(m, nb, "hmap" if m == 2 else "table")
+            sched = SimplexSchedule(m, nb, kind)
+            for k in (2, 4, 8):
+                if k > sched.steps:
+                    continue
+                sk = shard_skew(sched, k)
+                if sk > 1.05:
+                    # ceil(S/k)/(S/k) is the optimum for S steps; tiny
+                    # cells (S < ~20k) cannot meet the 1.05 regime with
+                    # ANY partition — log, don't record.
+                    print(f"# SHARD_SKEW skip m={m} n={n} k={k}: "
+                          f"S={sched.steps} too small (optimal skew "
+                          f"{sk:.3f} > 1.05)")
+                    continue
+                row = {
+                    "test": "SHARD_SKEW", "map": kind, "m": m, "n": n,
+                    "grid_steps": sched.steps, "shards": k,
+                    "skew": sk,
+                }
+                if k <= nb:  # the slab baseline needs k nonempty layers
+                    row["slab_skew"] = slab_skew(m, nb, k)
+                if (m, n) in ca_cells:
+                    mesh = (shard_mesh(k)
+                            if jax.device_count() >= k else None)
+                    rng = np.random.default_rng(m * 10 + k)
+                    s = (rng.random((n,) * m) < 0.4).astype(np.int32)
+                    s = np.where(np.asarray(Ref.simplex_mask(m, n)), s, 0)
+                    s = s.astype(np.int32)
+                    single = (simplex_ca2d if m == 2 else simplex_ca_md)(
+                        s, kind=kind
+                    )
+                    shd = sharded_ca(s, k, kind=kind, mesh=mesh)
+                    exact = bool(np.array_equal(
+                        np.asarray(single), np.asarray(shd)
+                    ))
+                    if not exact:
+                        raise SystemExit(
+                            f"SHARD_SKEW bit-exactness FAILED: m={m} "
+                            f"n={n} kind={kind} shards={k}"
+                        )
+                    row["bit_exact"] = exact
+                    row["devices"] = jax.device_count()
+                rows.append(row)
     return rows
 
 
@@ -284,6 +370,12 @@ def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
                     if "max_abs_err" in r
                     else {}
                 ),
+                **{
+                    key: r[key]
+                    for key in ("shards", "skew", "slab_skew",
+                                "bit_exact", "devices")
+                    if key in r
+                },
             }
             for r in rows
             if "grid_steps" in r
@@ -343,7 +435,14 @@ def main(argv=None) -> None:
         for r in rp:
             print(f"{r['test']},{r['body']},{r['map']},m={r['m']},"
                   f"err={r['max_abs_err']:.2e}")
-        path = write_maps_artifact(rcomp + rc + rp, path=out)
+        print("# ==== §7: sharded simplex execution (fold skew) ====")
+        rs = _shard_rows(quick=True)
+        for r in rs:
+            print(f"{r['test']},{r['map']},m={r['m']},n={r['n']},"
+                  f"k={r['shards']},skew={r['skew']:.4f},"
+                  f"slab={r.get('slab_skew', float('nan')):.3f},"
+                  f"bit_exact={r.get('bit_exact', '-')}")
+        path = write_maps_artifact(rcomp + rc + rp + rs, path=out)
         validate_artifact(path)
         print(f"# wrote + validated {path}")
         print(f"# total {time.time()-t0:.0f}s")
@@ -381,6 +480,13 @@ def main(argv=None) -> None:
     for r in rp:
         print(f"{r['test']},{r['body']},{r['map']},m={r['m']},"
               f"err={r['max_abs_err']:.2e}")
+    print("# ==== §7: sharded simplex execution (fold skew) ====")
+    rs = _shard_rows()
+    for r in rs:
+        print(f"{r['test']},{r['map']},m={r['m']},n={r['n']},"
+              f"k={r['shards']},skew={r['skew']:.4f},"
+              f"slab={r.get('slab_skew', float('nan')):.3f},"
+              f"bit_exact={r.get('bit_exact', '-')}")
     print("# ==== Fig.12/15: energy (modeled) ====")
     re = bench_energy.main()
     print("# ==== §6: general-m (r,beta) ====")
@@ -388,7 +494,7 @@ def main(argv=None) -> None:
     print("# ==== beyond-paper: folded causal attention ====")
     ra = bench_attention.main()
 
-    path = write_maps_artifact(r2 + r3 + rm + rc + rcomp + rp, path=out)
+    path = write_maps_artifact(r2 + r3 + rm + rc + rcomp + rp + rs, path=out)
     validate_artifact(path)
     print(f"# wrote + validated {path}")
 
@@ -410,6 +516,9 @@ def main(argv=None) -> None:
     for r in rcomp:
         print(f"compiled/{r['test']}/{r['map']},{r['us_per_call']:.0f},"
               f"autotune={r.get('autotune_source', '-')}")
+    for r in rs:
+        print(f"shard/m={r['m']}/n={r['n']}/k={r['shards']},0,"
+              f"skew={r['skew']:.4f}")
     for r in re:
         print(f"fig12/{r['test']}/{r['map']},0,"
               f"eps_per_w_vs_bb={r['eps_per_w_vs_bb']:.2f}")

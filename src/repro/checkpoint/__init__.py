@@ -1,1 +1,1 @@
-"""checkpoint subpackage."""
+"""Atomic, sharded, elastic checkpointing (see ``checkpointing``)."""

@@ -32,6 +32,7 @@ __all__ = ["save", "restore", "restore_latest", "latest_step", "list_steps"]
 
 
 def _flatten(tree, prefix=""):
+    """Flatten a dict/list tree to {'a/b/0': leaf} path keys."""
     out = {}
     if isinstance(tree, dict):
         for k, v in tree.items():
@@ -80,6 +81,18 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
 
 
 def list_steps(ckpt_dir: str):
+    """Sorted step numbers of every *complete* checkpoint in the dir.
+
+    A checkpoint counts only once its ``manifest.json`` exists — i.e.
+    after the atomic tmp-dir rename — so an interrupted save is
+    invisible here.
+
+    Args:
+        ckpt_dir: Checkpoint root directory.
+
+    Returns:
+        Sorted list of int steps (empty if the dir doesn't exist).
+    """
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
@@ -91,7 +104,29 @@ def list_steps(ckpt_dir: str):
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    # prefer the pointer; validate against complete checkpoints
+    """Newest complete checkpoint step, or None if there is none.
+
+    Prefers the atomically-updated LATEST pointer, but validates it
+    against the complete checkpoints on disk (a pointer written just
+    before a crash may name a checkpoint that never finished) —
+    falling back to the newest complete step.
+
+    Args:
+        ckpt_dir: Checkpoint root directory.
+
+    Returns:
+        The step number to resume from, or None for a cold start.
+
+    Example:
+        >>> import tempfile
+        >>> d = tempfile.mkdtemp()
+        >>> latest_step(d) is None
+        True
+        >>> _ = save(d, 3, {"w": np.zeros(2)})
+        >>> _ = save(d, 7, {"w": np.ones(2)})
+        >>> latest_step(d)
+        7
+    """
     steps = list_steps(ckpt_dir)
     if not steps:
         return None
@@ -126,6 +161,7 @@ def restore(ckpt_dir: str, step: int, proto: Any, shardings: Any = None) -> Any:
             out[name] = jnp.asarray(arr)
     # remap to nested structure using proto as template
     def rebuild(proto, prefix=""):
+        """Rebuild the nested tree from the flat ``out`` dict."""
         if isinstance(proto, dict):
             return {k: rebuild(v, f"{prefix}{k}/") for k, v in proto.items()}
         if isinstance(proto, (tuple, list)):
@@ -137,6 +173,18 @@ def restore(ckpt_dir: str, step: int, proto: Any, shardings: Any = None) -> Any:
 
 
 def restore_latest(ckpt_dir: str, proto: Any, shardings: Any = None):
+    """Restore the newest complete checkpoint, or signal a cold start.
+
+    Args:
+        ckpt_dir: Checkpoint root directory.
+        proto: Tree of leaves (or ShapeDtypeStructs) shaping the result.
+        shardings: Optional matching tree of ``jax.sharding.Sharding``
+            for elastic re-placement.
+
+    Returns:
+        ``(tree, step)`` of the newest complete checkpoint, or
+        ``(None, None)`` when no checkpoint exists.
+    """
     s = latest_step(ckpt_dir)
     if s is None:
         return None, None

@@ -678,22 +678,34 @@ def schedule3d_table(n: int) -> np.ndarray:
 
 
 def folded_causal_pairs(n_tiles: int) -> np.ndarray:
-    """(n_tiles/2, 2) pairs (i, n-1-i): each pair owns i+1 + n-i = n+1 KV
-    tiles — the equal-area causal partition used for sequence-parallel
-    sharding and by the flash kernel's folded grid.
+    """Folded pairs (i, n-1-i): the equal-area causal partition.
+
+    Each pair owns ``i+1 + n-i = n+1`` KV tiles — the load-balanced
+    fold used for sequence-parallel sharding and by the flash kernel's
+    folded grid (its k-way generalization to any dimension is
+    ``distributed.simplex_sharding.fold_partition``).  An odd tile
+    count self-pairs the middle tile: the last row is ``[mid, mid]``
+    and owns only ``mid+1`` KV tiles — callers that require the
+    constant ``n+1``-tile balance (the folded flash grid) must reject
+    odd counts instead of consuming the short row.
 
     Args:
-        n_tiles: Even number of query tiles.
+        n_tiles: Number of query tiles, >= 1.
 
     Returns:
-        ``(n_tiles/2, 2)`` int32 array of folded query-tile pairs.
+        ``(ceil(n_tiles/2), 2)`` int32 array of folded query-tile
+        pairs; for odd ``n_tiles`` the final row is the self-paired
+        middle tile.
 
     Example:
         >>> folded_causal_pairs(4).tolist()
         [[0, 3], [1, 2]]
+        >>> folded_causal_pairs(5).tolist()
+        [[0, 4], [1, 3], [2, 2]]
     """
-    assert n_tiles % 2 == 0
-    i = np.arange(n_tiles // 2, dtype=np.int32)
+    if n_tiles < 1:
+        raise ValueError(f"n_tiles must be >= 1, got {n_tiles}")
+    i = np.arange((n_tiles + 1) // 2, dtype=np.int32)
     return np.stack([i, n_tiles - 1 - i], 1)
 
 

@@ -1,1 +1,37 @@
-"""distributed subpackage."""
+"""Multi-device execution: partition rules, sharding, fault tolerance.
+
+* ``simplex_sharding`` — equal-volume fold partitions of any
+  ``SimplexSchedule`` over a mesh axis, the ``shard_skew`` metric, and
+  the sharded CA executors (engine per-shard / shard_map + ppermute) —
+  DESIGN.md §7.
+* ``sharding`` — LM parameter/optimizer/batch/cache partition rules.
+* ``fault_tolerance`` — heartbeat files and the ``watchdog_restart``
+  supervision loop.
+* ``compression`` — DCN-hop gradient compression with error feedback.
+"""
+
+from repro.distributed.simplex_sharding import (  # noqa: F401
+    ShardedSimplexCA,
+    ShardSchedule,
+    StepShard,
+    fold_partition,
+    shard_mesh,
+    shard_schedules,
+    shard_skew,
+    shard_state,
+    sharded_ca,
+    slab_skew,
+)
+
+__all__ = [
+    "StepShard",
+    "ShardSchedule",
+    "fold_partition",
+    "shard_schedules",
+    "shard_skew",
+    "slab_skew",
+    "shard_mesh",
+    "shard_state",
+    "ShardedSimplexCA",
+    "sharded_ca",
+]

@@ -31,6 +31,7 @@ __all__ = ["compress_bf16", "compress_int8", "init_error_state"]
 
 
 def init_error_state(params_like: Any) -> Any:
+    """Zero f32 error-feedback accumulators shaped like ``params_like``."""
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params_like
     )
@@ -40,6 +41,7 @@ def compress_bf16(grads: Any, err: Any) -> Tuple[Any, Any]:
     """Returns (bf16 grads-with-feedback, new error state)."""
 
     def one(g, e):
+        """Quantize one leaf; carry the rounding error forward."""
         gf = g.astype(jnp.float32) + e
         q = gf.astype(jnp.bfloat16)
         return q, gf - q.astype(jnp.float32)
@@ -58,6 +60,7 @@ def compress_int8(grads: Any, err: Any) -> Tuple[Any, Any]:
     """Per-tensor absmax int8; returns ((q, scale) tree, new error)."""
 
     def one(g, e):
+        """Quantize one leaf; carry the quantization error forward."""
         gf = g.astype(jnp.float32) + e
         scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
         q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
@@ -75,7 +78,10 @@ def compress_int8(grads: Any, err: Any) -> Tuple[Any, Any]:
 
 
 def decompress_int8(comp: Any) -> Any:
+    """Dequantize a ``compress_int8`` tree back to f32 gradients."""
+
     def one(qs):
+        """Dequantize one (q, scale) leaf."""
         q, scale = qs
         return q.astype(jnp.float32) * scale
 

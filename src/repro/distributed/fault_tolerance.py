@@ -54,11 +54,21 @@ class Heartbeat:
         os.makedirs(dir_, exist_ok=True)
 
     def beat(self):
+        """Touch this host's heartbeat file with the current time."""
         with open(self.path, "w") as f:
             f.write(str(time.time()))
 
     @staticmethod
     def stale_hosts(dir_: str, timeout_s: float):
+        """Host ids whose heartbeat is older than ``timeout_s`` seconds.
+
+        Args:
+            dir_: Heartbeat directory.
+            timeout_s: Staleness threshold in seconds.
+
+        Returns:
+            Sorted list of failed host ids.
+        """
         now = time.time()
         out = []
         for f in os.listdir(dir_):

@@ -54,6 +54,15 @@ def _detp(spec: P, fsdp) -> P:
 
 
 def named(mesh: Mesh, spec_tree):
+    """Bind a PartitionSpec tree to ``mesh`` as NamedSharding leaves.
+
+    Args:
+        mesh: The device mesh to bind to.
+        spec_tree: Pytree of ``jax.sharding.PartitionSpec`` leaves.
+
+    Returns:
+        The same tree with each spec wrapped in ``NamedSharding``.
+    """
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s),
         spec_tree,
@@ -131,6 +140,7 @@ def param_specs(params, mesh: Mesh, tp: bool = True, moe_ep: bool = False):
     fsdp = dp_axes(mesh, tp)
 
     def walk(path, leaf):
+        """Spec for one parameter leaf (scan-stacked leaves handled)."""
         names = tuple(
             k.key if hasattr(k, "key") else str(k) for k in path
         )
@@ -167,6 +177,7 @@ def opt_state_specs(opt_state, pspecs, params, mesh: Mesh):
     }
 
     def walk(path, leaf):
+        """Spec for one optimizer-state leaf via its parameter's spec."""
         names = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
         if names[-1] == "gnorm":
             return P()
@@ -203,9 +214,20 @@ def _divisible(n: int, mesh: Mesh, axes) -> bool:
 
 
 def batch_specs(batch, mesh: Mesh, tp: bool = True):
+    """PartitionSpec tree for a batch: dim 0 over dp when divisible.
+
+    Args:
+        batch: Pytree of batch arrays.
+        mesh: The device mesh.
+        tp: Whether a 'model' axis is in use (affects the dp group).
+
+    Returns:
+        Matching PartitionSpec tree; non-divisible leaves replicate.
+    """
     dp = dp_axes(mesh, tp)
 
     def walk(leaf):
+        """Spec for one batch leaf."""
         if leaf.ndim == 0:
             return P()
         dims: list = [None] * leaf.ndim
@@ -223,6 +245,7 @@ def cache_specs(cache, mesh: Mesh, tp: bool = True):
     msize = mesh.shape["model"] if tp else 1
 
     def walk(leaf):
+        """Spec for one cache leaf."""
         if leaf.ndim == 0:
             return P()
         dims: list = [None] * leaf.ndim

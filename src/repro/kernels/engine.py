@@ -36,6 +36,11 @@ established, dimension-generically:
   ``pallas_call`` per piece (``split=``, autotuned default); the engine
   refuses the split for halo bodies, whose neighbor reads make
   per-piece chaining unsound.
+* **Explicit schedules** — ``SimplexKernel(..., schedule=s)`` launches
+  any object with the schedule surface (``.grid``/``.map``/
+  ``.prefetch``) instead of resolving a kind: the per-shard execution
+  path of ``distributed/simplex_sharding.py`` (DESIGN.md §7), where
+  each device walks one ``ShardSchedule`` of the folded partition.
 * **Compiled fallback** — ``executor='xla'`` routes to the fused-XLA
   executors in ``kernels/compiled.py`` where one exists (ACCUM, MAP),
   the compiled path on hosts whose Pallas backend can only interpret.
@@ -188,7 +193,7 @@ def _schedule(m: int, nb: int, kind: str) -> SimplexSchedule:
 
 
 def _launch_plan(m: int, nb: int, kind: str, split: Optional[bool],
-                 element_local: bool):
+                 element_local: bool, schedule=None):
     """Schedules to launch, one ``pallas_call`` each (DESIGN.md §5).
 
     Composite schedules may split into one launch per piece when the
@@ -196,7 +201,19 @@ def _launch_plan(m: int, nb: int, kind: str, split: Optional[bool],
     launches through the aliased output is exact); halo bodies always
     launch the fused walk — a split piece would read neighbours the
     previous launch already stepped.
+
+    An explicit ``schedule`` (e.g. a ``ShardSchedule`` from
+    ``distributed/simplex_sharding.py``, DESIGN.md §7) bypasses kind
+    resolution and piece splitting: the engine launches exactly the
+    steps that schedule enumerates.
     """
+    if schedule is not None:
+        if schedule.m != m or schedule.n != nb:
+            raise ValueError(
+                f"explicit schedule is (m={schedule.m}, nb={schedule.n}) "
+                f"but the launch needs (m={m}, nb={nb})"
+            )
+        return [schedule]
     sched = _schedule(m, nb, kind)
     if sched.kind == "composite" and element_local:
         subs = sched.split_pieces()
@@ -399,7 +416,8 @@ def _launch_domain(kernel: "SimplexKernel", body: KernelBody, x):
     dtype = padded.dtype
 
     for sched in _launch_plan(m, nb, kernel.kind, kernel.split,
-                              body.element_local and not body.halo):
+                              body.element_local and not body.halo,
+                              schedule=kernel.schedule):
         fn, table = sched.map, sched.prefetch
 
         def _out_transform(blocks, coords, v):
@@ -629,7 +647,16 @@ class MapBody(KernelBody):
         """Chunked linear walk over the schedule's flattened grid."""
         m, chunk = kernel.m, kernel.chunk
         interpret = resolve_interpret(kernel.interpret)
-        sched = _schedule(m, nb, kernel.kind)
+        if kernel.schedule is not None:
+            if kernel.schedule.m != m or kernel.schedule.n != nb:
+                raise ValueError(
+                    f"explicit schedule is (m={kernel.schedule.m}, "
+                    f"nb={kernel.schedule.n}) but the launch needs "
+                    f"(m={m}, nb={nb})"
+                )
+            sched = kernel.schedule
+        else:
+            sched = _schedule(m, nb, kernel.kind)
         fn, table = sched.map, sched.prefetch
         steps = sched.steps
         grid = sched.grid
@@ -728,6 +755,12 @@ class SimplexKernel:
         chunk: MAP body only — steps materialized per launch step.
         executor: ``'pallas'`` (default) or ``'xla'`` — the fused-XLA
             fallback where the body provides one.
+        schedule: An explicit schedule object (``.grid`` / ``.map`` /
+            ``.prefetch`` surface, e.g. a ``ShardSchedule`` from
+            ``distributed/simplex_sharding.py``) to launch instead of
+            resolving ``kind``; must match the operand's (m, nb).
+            The launch walks exactly its steps — the per-shard
+            execution path of DESIGN.md §7.
 
     Example:
         >>> import numpy as np
@@ -740,7 +773,7 @@ class SimplexKernel:
     def __init__(self, body, m: int, *, rho: Optional[int] = None,
                  kind: str = "auto", interpret: Optional[bool] = None,
                  split: Optional[bool] = None, chunk: int = 128,
-                 executor: str = "pallas"):
+                 executor: str = "pallas", schedule=None):
         if m < 2:
             raise ValueError(f"m must be >= 2, got {m}")
         if executor not in ("pallas", "xla"):
@@ -753,6 +786,7 @@ class SimplexKernel:
         self.split = split
         self.chunk = chunk
         self.executor = executor
+        self.schedule = schedule
 
     def __call__(self, x):
         """Launch the body on operand ``x`` (domain array, points, or

@@ -43,11 +43,33 @@ __all__ = ["flash_attention", "flash_grid_steps"]
 
 
 def flash_grid_steps(nq_tiles: int, kind: str) -> int:
+    """Grid steps the flash kernel launches for ``nq_tiles`` query tiles.
+
+    Args:
+        nq_tiles: Query-tile count.
+        kind: ``'bb'`` (full square) or ``'folded'`` (zero-waste fold;
+            requires an even tile count — the fold pairs tile ``i``
+            with ``nq-1-i`` and gives every pair exactly ``nq+1``
+            steps, which has no balanced odd-count form).
+
+    Returns:
+        Total grid steps (excluding the batch*heads axis).
+
+    Raises:
+        ValueError: Unknown kind, or ``'folded'`` with an odd
+            ``nq_tiles`` — pad the sequence or use ``'bb'``.
+    """
     if kind == "bb":
         return nq_tiles * nq_tiles
     if kind == "folded":
+        if nq_tiles % 2:
+            raise ValueError(
+                f"folded schedule needs an even query-tile count, got "
+                f"{nq_tiles}; pad the sequence to an even tile count or "
+                "use kind='bb'"
+            )
         return (nq_tiles // 2) * (nq_tiles + 1)
-    raise ValueError(kind)
+    raise ValueError(f"unknown flash schedule kind {kind!r}")
 
 
 def _folded_qkv(p, j, nq):
@@ -94,7 +116,12 @@ def flash_attention(
     if kind == "folded" and nq == 1:
         kind = "bb"  # single tile: nothing to fold
     if kind == "folded":
-        assert nq % 2 == 0, "folded schedule needs an even tile count"
+        if nq % 2:
+            raise ValueError(
+                f"folded schedule needs an even query-tile count, got "
+                f"nq={nq} (seq {s} / block_q {block_q}); pad the "
+                "sequence or use kind='bb'"
+            )
         grid = (b * hq, nq // 2, nq + 1)
 
         def q_map(bh, p, j):

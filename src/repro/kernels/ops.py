@@ -146,7 +146,7 @@ def causal_flash_attention(
     (interpret mode resolved per backend — policy.default_interpret);
     impl='xla' is the fused-XLA reference path used by the distributed
     dry-run (Pallas TPU kernels cannot lower on the CPU backend —
-    DESIGN.md §8)."""
+    DESIGN.md §5)."""
     if impl == "xla":
         return ref.causal_attention(q, k, v)
     return flash_attention(

@@ -1,10 +1,11 @@
 """Doctest gate for the documented core scheduling API.
 
-The docstring satellite of ISSUE 2: every public symbol of
-``core/schedule.py`` and ``core/trapezoids.py`` carries a doctest-style
-example; running them here keeps the examples truthful (the ruff D1xx
-gate in pyproject.toml keeps the *coverage* from regressing, this test
-keeps the *content* from rotting).
+The docstring satellite of ISSUE 2, extended by ISSUE 8 to the
+sharded-execution surface (``distributed/``, ``checkpoint/``): every
+public symbol of the gated modules carries a doctest-style example;
+running them here keeps the examples truthful (the ruff D1xx gate in
+pyproject.toml keeps the *coverage* from regressing, this test keeps
+the *content* from rotting).
 """
 
 import doctest
@@ -34,4 +35,20 @@ def test_engine_doctests():
     import repro.kernels.engine
 
     result = doctest.testmod(repro.kernels.engine, verbose=False)
+    assert result.failed == 0 and result.attempted > 0
+
+
+def test_simplex_sharding_doctests():
+    import repro.distributed.simplex_sharding
+
+    result = doctest.testmod(
+        repro.distributed.simplex_sharding, verbose=False
+    )
+    assert result.failed == 0 and result.attempted > 0
+
+
+def test_checkpointing_doctests():
+    import repro.checkpoint.checkpointing
+
+    result = doctest.testmod(repro.checkpoint.checkpointing, verbose=False)
     assert result.failed == 0 and result.attempted > 0

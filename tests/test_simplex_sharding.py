@@ -1,0 +1,273 @@
+"""Deterministic tests for multi-device simplex sharding (ISSUE 8).
+
+Partition invariants (fold cover / balance / skew), the ShardSchedule
+surface (table concat == base table), engine-executor and SPMD-executor
+bit-exactness against the single-device engine, the engine's explicit
+``schedule=`` override, and the odd-tile-count behaviors of
+``folded_causal_pairs`` / ``flash_grid_steps``.
+
+The SPMD tests require >= 4 devices and skip on single-device sessions
+(CI runs them under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.kernels.ref as ref
+from repro.core.schedule import SimplexSchedule, folded_causal_pairs
+from repro.distributed.simplex_sharding import (
+    ShardedSimplexCA,
+    ShardSchedule,
+    fold_partition,
+    shard_mesh,
+    shard_schedules,
+    shard_skew,
+    sharded_ca,
+    slab_skew,
+)
+from repro.kernels.engine import SimplexKernel
+from repro.kernels.flash_attention import flash_grid_steps
+from repro.kernels.ops import simplex_ca2d, simplex_ca_md
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >=4 devices (run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+# ---------------------------------------------------------------- partition
+
+
+@pytest.mark.parametrize("S", [1, 2, 5, 6, 17, 36, 120, 136, 529])
+@pytest.mark.parametrize("k", [1, 2, 3, 4, 8])
+def test_fold_partition_disjoint_cover_and_balance(S, k):
+    if k > S:
+        with pytest.raises(ValueError):
+            fold_partition(S, k)
+        return
+    shards = fold_partition(S, k)
+    assert len(shards) == k
+    cover = [i for s in shards for a, b in s.ranges for i in range(a, b)]
+    assert sorted(cover) == list(range(S))
+    assert len(cover) == len(set(cover))
+    sizes = [s.steps for s in shards]
+    assert max(sizes) - min(sizes) <= 1  # optimal balance
+    for s in shards:
+        assert 1 <= len(s.ranges) <= 2
+
+
+def test_fold_partition_matches_folded_causal_pairs():
+    # k = S/2 reduces the general fold to the m=2 pair partition.
+    S = 8
+    shards = fold_partition(S, S // 2)
+    pairs = folded_causal_pairs(S)
+    for shard, (i, j) in zip(shards, pairs.tolist()):
+        got = sorted(x for a, b in shard.ranges for x in range(a, b))
+        assert got == sorted([i, j])
+
+
+@pytest.mark.parametrize("m,ns", [(2, (16, 32, 64, 128, 256)),
+                                  (3, (8, 16, 32, 64))])
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_shard_skew_bound(m, ns, k):
+    # acceptance criterion: skew <= 1.05 for m in {2,3}, n <= 256.
+    for n in ns:
+        kind = "hmap" if m == 2 else "table"
+        sched = SimplexSchedule(m, n, kind)
+        sk = shard_skew(sched, k)
+        assert sk <= 1.05, (m, n, k, sk)
+        # and the fold is information-theoretically optimal:
+        S = sched.steps
+        assert sk <= np.ceil(S / k) / (S / k) + 1e-12
+
+
+def test_slab_baseline_is_worse():
+    # the naive equal-thickness slab split carries the ~m x imbalance
+    # the fold removes (the contrast SHARD_SKEW rows record).
+    assert slab_skew(2, 64, 8) > 1.5
+    assert slab_skew(3, 32, 8) > 2.0
+    base = SimplexSchedule(3, 32, "table")
+    assert shard_skew(base, 8) < 1.01 < slab_skew(3, 32, 8)
+
+
+# ------------------------------------------------------------ ShardSchedule
+
+
+@pytest.mark.parametrize("m,n,kind", [
+    (2, 16, "hmap"), (2, 16, "rb"), (2, 12, "composite"),
+    (3, 8, "table"), (3, 8, "octant"), (3, 12, "composite"),
+    (4, 4, "table"),
+])
+@pytest.mark.parametrize("k", [2, 4])
+def test_shard_tables_cover_base(m, n, kind, k):
+    base = SimplexSchedule(m, n, kind)
+    subs = shard_schedules(base, k)
+    assert sum(s.steps for s in subs) == base.steps
+    tabs = np.concatenate([s.table() for s in subs])
+    assert sorted(map(tuple, tabs.tolist())) == sorted(
+        map(tuple, base.table().tolist())
+    )
+
+
+def test_owned_block_masks_are_disjoint_and_cover():
+    base = SimplexSchedule(3, 8, "table")
+    subs = shard_schedules(base, 4)
+    masks = [s.owned_block_mask() for s in subs]
+    total = np.zeros_like(masks[0], dtype=np.int32)
+    for msk in masks:
+        total += msk.astype(np.int32)
+    domain = np.asarray(ref.simplex_mask(3, 8))
+    assert np.array_equal(total == 1, domain)
+    assert np.all(total <= 1)
+
+
+def test_empty_shard_rejected():
+    base = SimplexSchedule(3, 4, "table")  # 20 steps
+    with pytest.raises(ValueError):
+        shard_schedules(base, 21)
+
+
+# ----------------------------------------------------- engine schedule= path
+
+
+def test_engine_explicit_schedule_accum():
+    # one shard's accum touches exactly its owned blocks.
+    base = SimplexSchedule(3, 4, "table")
+    subs = shard_schedules(base, 2)
+    rho = 2
+    n = base.n * rho
+    outs = []
+    for sh in subs:
+        kern = SimplexKernel("accum", 3, rho=rho, kind="table", schedule=sh)
+        outs.append(np.asarray(kern(np.zeros((n,) * 3, np.int32))))
+    merged = sum(outs)
+    full = np.asarray(
+        SimplexKernel("accum", 3, rho=rho, kind="table")(
+            np.zeros((n,) * 3, np.int32)
+        )
+    )
+    assert np.array_equal(merged, full)
+
+
+def test_engine_explicit_schedule_validates_shape():
+    base = SimplexSchedule(3, 4, "table")
+    sh = shard_schedules(base, 2)[0]
+    kern = SimplexKernel("accum", 3, rho=2, schedule=sh)
+    with pytest.raises(ValueError):  # nb mismatch: n=16 -> nb=8 != 4
+        kern(np.zeros((16, 16, 16), np.int32))
+
+
+# ------------------------------------------------------------- sharded CA
+
+
+def _random_state(m, n, seed):
+    rng = np.random.default_rng(seed)
+    s = (rng.random((n,) * m) < 0.4).astype(np.int32)
+    return np.where(np.asarray(ref.simplex_mask(m, n)), s, 0).astype(np.int32)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_sharded_ca_m3_engine_bit_exact(k):
+    n = 16
+    state = _random_state(3, n, 0)
+    want = np.asarray(simplex_ca_md(state, kind="table"))
+    got = np.asarray(sharded_ca(state, k, kind="table"))
+    assert np.array_equal(want, got)
+
+
+def test_sharded_ca_m2_engine_bit_exact():
+    n = 32
+    state = _random_state(2, n, 1)
+    want = np.asarray(simplex_ca2d(state, kind="hmap"))
+    got = np.asarray(sharded_ca(state, 4, kind="hmap"))
+    assert np.array_equal(want, got)
+
+
+def test_sharded_ca_multi_step():
+    n = 16
+    state = _random_state(3, n, 2)
+    want = state
+    for _ in range(3):
+        want = np.asarray(simplex_ca_md(want, kind="table"))
+    got = np.asarray(sharded_ca(state, 4, steps=3, kind="table"))
+    assert np.array_equal(want, got)
+
+
+@needs_devices
+def test_sharded_ca_m3_spmd_bit_exact():
+    k = min(4, jax.device_count())
+    n = 16
+    mesh = shard_mesh(k)
+    state = _random_state(3, n, 3)
+    want = np.asarray(simplex_ca_md(state, kind="table"))
+    runner = ShardedSimplexCA(3, n, k, kind="table", mesh=mesh)
+    got = np.asarray(runner.step(state, executor="spmd"))
+    assert np.array_equal(want, got)
+
+
+@needs_devices
+def test_sharded_ca_m2_spmd_periodic_bit_exact():
+    k = min(4, jax.device_count())
+    n = 32
+    mesh = shard_mesh(k)
+    state = _random_state(2, n, 4)
+    want = np.asarray(simplex_ca2d(state, kind="hmap"))
+    runner = ShardedSimplexCA(2, n, k, kind="hmap", mesh=mesh)
+    got = np.asarray(runner.step(state, executor="spmd"))
+    assert np.array_equal(want, got)
+
+
+@needs_devices
+def test_engine_executor_with_mesh_placement():
+    k = min(4, jax.device_count())
+    n = 16
+    state = _random_state(3, n, 5)
+    want = np.asarray(simplex_ca_md(state, kind="table"))
+    got = np.asarray(
+        sharded_ca(state, k, kind="table", mesh=shard_mesh(k))
+    )
+    assert np.array_equal(want, got)
+
+
+def test_shard_mesh_too_few_devices():
+    with pytest.raises(ValueError):
+        shard_mesh(jax.device_count() + 1)
+
+
+# -------------------------------------------------------- odd tile counts
+
+
+def test_folded_causal_pairs_odd_self_pairs_middle():
+    pairs = folded_causal_pairs(5)
+    assert pairs.tolist() == [[0, 4], [1, 3], [2, 2]]
+    flat = sorted(set(pairs.ravel().tolist()))
+    assert flat == [0, 1, 2, 3, 4]
+
+
+def test_folded_causal_pairs_even_unchanged():
+    assert folded_causal_pairs(4).tolist() == [[0, 3], [1, 2]]
+
+
+def test_folded_causal_pairs_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        folded_causal_pairs(0)
+
+
+def test_flash_grid_steps_odd_raises():
+    with pytest.raises(ValueError, match="even"):
+        flash_grid_steps(5, "folded")
+    assert flash_grid_steps(5, "bb") == 25
+    assert flash_grid_steps(4, "folded") == 10
+
+
+def test_flash_attention_odd_tiles_clear_error():
+    from repro.kernels.flash_attention import flash_attention
+
+    q = np.zeros((1, 1, 24, 8), np.float32)
+    with pytest.raises(ValueError, match="even"):
+        flash_attention(
+            jax.numpy.asarray(q), jax.numpy.asarray(q),
+            jax.numpy.asarray(q), kind="folded", block_q=8, block_kv=8,
+        )
