@@ -1,10 +1,20 @@
 """Beyond-paper table: the simplex schedule applied to causal attention.
 
-Measures the *compiled XLA* path (repro.models.attention) — real matmul
-work on this host, no interpreter overhead: the folded schedule runs
-~tri(n)/n^2 of BB's block FLOPs, so wall-clock speedup should approach
-2x as nq grows.  Also reports the Pallas kernel's grid-step counts
-(the TPU-structural quantity) per (seq, block) shape.
+Two sections:
+
+* ``run()`` — the *compiled XLA* microbenchmark (repro.models.attention):
+  real matmul work on this host, no interpreter overhead: the folded
+  schedule runs ~tri(n)/n^2 of BB's block FLOPs, so wall-clock speedup
+  should approach 2x as nq grows.  Also reports the Pallas kernel's
+  grid-step counts (the TPU-structural quantity) per (seq, block) shape.
+* ``serving_rows()`` — the serving metric (DESIGN.md §8): tokens/s for
+  batched prefill + decode at ``examples/serve_lm.py``'s workload
+  (reduced yi-6b, batch 4, prompt 64), with the attention executor
+  pinned per row to kind in {bb, folded, chunked} via
+  ``cfg.attention_impl``.  These are the bench-maps/v2 ATTN rows the
+  ``choose_attn_impl`` autotuner consumes as measured evidence (only
+  when ``compiled: true`` — flash rows on interpret hosts record the
+  emulator and are marked accordingly).
 """
 
 from __future__ import annotations
@@ -56,6 +66,121 @@ def run():
             "grid_steps_folded": flash_grid_steps(nq, "folded"),
             "step_ratio": flash_grid_steps(nq, "bb")
             / flash_grid_steps(nq, "folded"),
+        })
+    return rows
+
+
+ATTN_KINDS = (("bb", "flash-bb"), ("folded", "flash-folded"),
+              ("chunked", "chunked"))
+
+
+def serving_rows(quick: bool = False):
+    """ATTN rows: serve-workload tokens/s per attention executor kind.
+
+    Runs ``launch/serve.py``'s actual prefill+decode path (reduced
+    yi-6b via ``Model``) three times — attention pinned to the flash
+    kernel's bb and folded schedules and to the chunked XLA path — and
+    records batched tokens/s for prefill and decode.  ``grid_steps``
+    carries heads x flash_grid_steps at the shape the dispatch would
+    launch (chunked is charged the folded walk it replaces), and
+    ``step_ratio`` the bb/folded grid-step quotient at that tile count.
+    Full mode adds an attention-only trio at nq=16 where the quotient
+    reaches ~1.9 (→ 2 as nq grows — the paper's speedup bound).
+    """
+    from repro.autotune import choose_attn_impl
+    from repro.configs.ALL import REDUCED
+    from repro.kernels.policy import default_interpret
+    from repro.models.model import Model
+
+    interpret = default_interpret()
+    cfg0 = REDUCED["yi-6b"]().replace(
+        act_dtype="float32", param_dtype="float32", remat="none"
+    )
+    b, s, gen = 4, 64, (8 if quick else 24)
+    dec = choose_attn_impl(s, cfg0.n_heads, cfg0.hd)
+    block = dec.block_q or 32
+    nq = s // block
+    ratio = flash_grid_steps(nq, "bb") / flash_grid_steps(nq, "folded")
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (b, s), 0, cfg0.vocab)
+    rows = []
+    for kind, impl in ATTN_KINDS:
+        cfg = cfg0.replace(attention_impl=impl)
+        model = Model(cfg)
+        params = model.init(key)
+        batch = {"tokens": tokens}
+        prefill = jax.jit(lambda p, bt, model=model: model.prefill(p, bt))
+        logits, caches = jax.block_until_ready(prefill(params, batch))
+        t0 = time.perf_counter()
+        reps = 2 if quick else 3
+        for _ in range(reps):
+            logits, caches = prefill(params, batch)
+            jax.block_until_ready(logits)
+        prefill_s = (time.perf_counter() - t0) / reps
+        decode = jax.jit(
+            lambda p, c, bt, model=model: model.decode(p, c, bt)
+        )
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        step0 = {"tokens": tok, "pos": jnp.full((b,), s, jnp.int32)}
+        jax.block_until_ready(decode(params, caches, step0)[0])
+        t0 = time.perf_counter()
+        for i in range(gen):
+            sb = {"tokens": tok, "pos": jnp.full((b,), s + i, jnp.int32)}
+            lg, _ = decode(params, caches, sb)
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        decode_s = time.perf_counter() - t0
+        rows.append({
+            "test": "ATTN", "map": kind, "m": 2, "n": nq,
+            "grid_steps": cfg.n_heads * flash_grid_steps(
+                nq, "bb" if kind == "bb" else "folded"
+            ),
+            "seq": s, "batch": b, "heads": cfg.n_heads,
+            "head_dim": cfg.hd, "step_ratio": ratio,
+            "tok_s_prefill": b * s / prefill_s,
+            "tok_s_decode": b * gen / decode_s,
+            "us_per_call": prefill_s * 1e6,
+            "compiled": kind == "chunked" or not interpret,
+        })
+    if not quick:
+        rows.extend(_attn_scale_rows(interpret))
+    return rows
+
+
+def _attn_scale_rows(interpret: bool):
+    """Attention-only ATTN trio at nq=16: step_ratio 256/136 ~ 1.9."""
+    from repro.models.attention import simplex_attention
+
+    b, h, s, d, block = 1, 4, 2048, 64, 128
+    nq = s // block
+    ratio = flash_grid_steps(nq, "bb") / flash_grid_steps(nq, "folded")
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, d), jnp.float32)
+    rows = []
+    for kind, impl in ATTN_KINDS:
+        if kind != "chunked":
+            from repro.kernels.flash_attention import flash_attention
+
+            f = jax.jit(lambda q, k, v, kind=kind: flash_attention(
+                q, k, v, kind=kind, block_q=block, block_kv=block
+            ))
+        else:
+            f = jax.jit(lambda q, k, v: simplex_attention(
+                q, k, v, impl="chunked", chunk=block
+            ))
+        us = _time(f, q, k, v, reps=2)
+        rows.append({
+            "test": "ATTN", "map": kind, "m": 2, "n": nq,
+            "grid_steps": h * flash_grid_steps(
+                nq, "bb" if kind == "bb" else "folded"
+            ),
+            "seq": s, "batch": b, "heads": h, "head_dim": d,
+            "step_ratio": ratio,
+            "tok_s_prefill": b * s / (us * 1e-6),
+            "us_per_call": us,
+            "compiled": kind == "chunked" or not interpret,
         })
     return rows
 

@@ -373,7 +373,10 @@ def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
                 **{
                     key: r[key]
                     for key in ("shards", "skew", "slab_skew",
-                                "bit_exact", "devices")
+                                "bit_exact", "devices",
+                                "seq", "batch", "heads", "head_dim",
+                                "step_ratio", "tok_s_prefill",
+                                "tok_s_decode")
                     if key in r
                 },
             }
@@ -388,7 +391,12 @@ def write_maps_artifact(rows, path: str = "BENCH_maps.json") -> str:
 
 def validate_artifact(path: str) -> None:
     """Fail (SystemExit) unless the artifact is well-formed v2 with at
-    least one compiled row — the schema gate the CI smoke job runs."""
+    least one compiled row — the schema gate the CI smoke job runs.
+
+    When ATTN rows are present (the serving metric — DESIGN.md §8),
+    additionally require all three executor kinds {bb, folded, chunked}
+    with positive prefill tokens/s per kind.
+    """
     with open(path) as f:
         artifact = json.load(f)
     if artifact.get("schema") != "bench-maps/v2":
@@ -402,6 +410,14 @@ def validate_artifact(path: str) -> None:
             raise SystemExit(f"row missing {missing}: {r}")
     if not any(r["compiled"] for r in rows):
         raise SystemExit("no compiled rows in artifact")
+    attn = [r for r in rows if r["test"] == "ATTN"]
+    if attn:
+        kinds = {r["map"] for r in attn}
+        if not {"bb", "folded", "chunked"} <= kinds:
+            raise SystemExit(f"ATTN rows missing kinds: {sorted(kinds)}")
+        for r in attn:
+            if not r.get("tok_s_prefill", 0) > 0:
+                raise SystemExit(f"ATTN row without tokens/s: {r}")
 
 
 def main(argv=None) -> None:
@@ -442,7 +458,15 @@ def main(argv=None) -> None:
                   f"k={r['shards']},skew={r['skew']:.4f},"
                   f"slab={r.get('slab_skew', float('nan')):.3f},"
                   f"bit_exact={r.get('bit_exact', '-')}")
-        path = write_maps_artifact(rcomp + rc + rp + rs, path=out)
+        print("# ==== §8: serving attention (tokens/s per executor) ====")
+        from . import bench_attention
+        ratt = bench_attention.serving_rows(quick=True)
+        for r in ratt:
+            print(f"{r['test']},{r['map']},steps={r['grid_steps']},"
+                  f"tok_s_prefill={r['tok_s_prefill']:.0f},"
+                  f"tok_s_decode={r.get('tok_s_decode', float('nan')):.0f},"
+                  f"step_ratio={r['step_ratio']:.2f}")
+        path = write_maps_artifact(rcomp + rc + rp + rs + ratt, path=out)
         validate_artifact(path)
         print(f"# wrote + validated {path}")
         print(f"# total {time.time()-t0:.0f}s")
@@ -493,8 +517,17 @@ def main(argv=None) -> None:
     rg = bench_general_m.main()
     print("# ==== beyond-paper: folded causal attention ====")
     ra = bench_attention.main()
+    print("# ==== §8: serving attention (tokens/s per executor) ====")
+    ratt = bench_attention.serving_rows()
+    for r in ratt:
+        print(f"{r['test']},{r['map']},n={r['n']},steps={r['grid_steps']},"
+              f"tok_s_prefill={r['tok_s_prefill']:.0f},"
+              f"tok_s_decode={r.get('tok_s_decode', float('nan')):.0f},"
+              f"step_ratio={r['step_ratio']:.2f}")
 
-    path = write_maps_artifact(r2 + r3 + rm + rc + rcomp + rp + rs, path=out)
+    path = write_maps_artifact(
+        r2 + r3 + rm + rc + rcomp + rp + rs + ratt, path=out
+    )
     validate_artifact(path)
     print(f"# wrote + validated {path}")
 
@@ -527,6 +560,9 @@ def main(argv=None) -> None:
     for r in ra:
         print(f"attn/{r['shape']},{r['folded_us']:.0f},"
               f"wall_speedup={r['wall_speedup']:.2f}")
+    for r in ratt:
+        print(f"serve-attn/{r['map']}/s={r['seq']},{r['us_per_call']:.0f},"
+              f"tok_s_prefill={r['tok_s_prefill']:.0f}")
     print(f"# total {time.time()-t0:.0f}s")
 
 

@@ -1,0 +1,89 @@
+"""CI smoke for the attention serving hot path (DESIGN.md §8).
+
+Runs ``serve_lm``'s smoke-scale workload (reduced yi-6b, batch 4,
+prompt 64) through ``attn_apply``'s dispatch three ways and asserts:
+
+* the autotune decision at the serve shape picks the folded flash
+  kernel (the tentpole default);
+* folded-vs-chunked **bit**-parity at the decision's tile, and flash
+  bb-vs-folded bit-parity, through the real model prefill;
+* decode through the KV-cache strip path still generates (tokens/s
+  printed), i.e. the serve loop runs end to end with flash prefill.
+
+Exits non-zero on any mismatch; the workflow then runs
+``benchmarks/run.py --quick``, which emits + validates the quick ATTN
+tokens/s rows.
+
+Usage:  PYTHONPATH=src python scripts/ci_attn_smoke.py
+"""
+
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    os.environ.setdefault("REPRO_AUTOTUNE_DISABLE", "1")  # hermetic
+    import jax
+    import jax.numpy as jnp
+
+    from repro.autotune import choose_attn_impl
+    from repro.configs.ALL import REDUCED
+    from repro.models.model import Model
+
+    cfg0 = REDUCED["yi-6b"]().replace(
+        act_dtype="float32", param_dtype="float32", remat="none"
+    )
+    b, s, gen = 4, 64, 8
+
+    dec = choose_attn_impl(s, cfg0.n_heads, cfg0.hd)
+    print(f"decision: impl={dec.impl} kind={dec.kind} "
+          f"block={dec.block_q} source={dec.source}")
+    if (dec.impl, dec.kind) != ("flash", "folded"):
+        print("FAIL: serve-shape decision is not folded flash")
+        return 1
+
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (b, s), 0, cfg0.vocab)
+    logits = {}
+    caches = None
+    for impl in ("flash-folded", "flash-bb", "chunked"):
+        # chunk = the decision's tile so the XLA walk shares the flash
+        # kernel's tiling/reduction order -> bit-comparable outputs
+        cfg = cfg0.replace(attention_impl=impl,
+                           attention_chunk=dec.block_q)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        lg, cc = jax.jit(model.prefill)(params, {"tokens": tokens})
+        logits[impl] = np.asarray(jax.block_until_ready(lg))
+        if impl == "flash-folded":
+            caches, fold_model, fold_params = cc, model, params
+
+    for other in ("flash-bb", "chunked"):
+        if not np.array_equal(logits["flash-folded"], logits[other]):
+            err = np.abs(logits["flash-folded"] - logits[other]).max()
+            print(f"FAIL: folded-vs-{other} prefill logits differ "
+                  f"(max abs {err})")
+            return 1
+    print(f"prefill bit-parity OK across executors "
+          f"(batch {b} x {s} tokens, tile {dec.block_q})")
+
+    decode = jax.jit(fold_model.decode)
+    tok = jnp.argmax(logits["flash-folded"][:, -1], -1)[:, None]
+    tok = tok.astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(gen):
+        sb = {"tokens": tok, "pos": jnp.full((b,), s + i, jnp.int32)}
+        lg, _ = decode(fold_params, caches, sb)
+        tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"decode OK: {gen} x {b} tokens ({gen * b / dt:.0f} tok/s)")
+    print("ATTN smoke PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

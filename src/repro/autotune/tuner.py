@@ -52,13 +52,17 @@ from repro.roofline.analysis import (
 
 __all__ = [
     "Decision",
+    "AttnDecision",
     "choose_kind",
+    "choose_attn_impl",
+    "attn_block_q",
     "candidate_kinds",
     "should_split_pieces",
     "clear_cache",
     "cache_path",
     "bench_artifact_path",
     "CACHE_SCHEMA",
+    "ATTN_INTERPRET_STEP_CAP",
 ]
 
 CACHE_SCHEMA = "repro-autotune/v1"
@@ -67,6 +71,13 @@ _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _BENCH_ENV = "REPRO_BENCH_ARTIFACT"
 _DISABLE_ENV = "REPRO_AUTOTUNE_DISABLE"
 _SPLIT_ENV = "REPRO_SPLIT_PIECES"
+_ATTN_CAP_ENV = "REPRO_ATTN_STEP_CAP"
+
+# Interpret-mode flash grid-step budget: heads x grid steps above which
+# the Pallas emulator (INTERPRET_STEP_S per step) would dominate and the
+# decision falls back to the fused-XLA chunked path.  Irrelevant on
+# compiled (TPU/GPU) backends.
+ATTN_INTERPRET_STEP_CAP = 4096
 
 
 @dataclass(frozen=True)
@@ -352,6 +363,276 @@ def choose_kind(
         cache = _load_cache(cpath)
         row = asdict(decision)
         del row["m"], row["n"], row["backend"]
+        cache["entries"][key] = row
+        _store_cache(cpath, cache)
+    return decision
+
+
+# ---------------------------------------------------------------------------
+# Attention-impl decisions (the serving hot path — DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttnDecision:
+    """One causal-attention dispatch decision (and its cache row).
+
+    Attributes:
+        seq: Sequence length the decision applies to.
+        heads: Query-head count (per example).
+        head_dim: Attention head dimension D.
+        backend: Backend the decision was made for.
+        impl: Winning executor — ``'flash'`` (simplex-grid Pallas
+            kernel) or ``'chunked'`` (fused-XLA fallback).
+        kind: Schedule of the winner: ``'folded'`` / ``'bb'`` for
+            flash, ``'chunked'`` for the XLA path.
+        block_q: Square tile side the flash kernel should launch with
+            (also the chunk for the XLA path); 0 when no tile divides
+            the sequence.
+        source: Provenance — 'measured', 'model', 'cache' or
+            'fallback' (shape unmappable by the flash kernel).
+        score_us: Predicted/measured cost of the winner, microseconds.
+        scores_us: Per-candidate scores, for inspection.
+        jax_version: JAX version at decision time.
+        fingerprint: Bench-artifact content hash at decision time.
+    """
+
+    seq: int
+    heads: int
+    head_dim: int
+    backend: str
+    impl: str
+    kind: str
+    block_q: int
+    source: str
+    score_us: float
+    scores_us: Dict[str, float]
+    jax_version: str
+    fingerprint: str
+
+
+_ATTN_BLOCKS = (128, 64, 32, 16, 8)
+
+
+def attn_block_q(seq: int, head_dim: int, backend: Optional[str] = None) -> int:
+    """Square attention tile side for a sequence length (0 if none fits).
+
+    Compiled backends take the largest MXU-friendly divisor of ``seq``
+    (biggest tile wins on real hardware).  Interpret backends prefer
+    the largest divisor that still yields at least two query tiles, so
+    the folded simplex walk is actually exercised rather than
+    degenerating to the single-tile bounding box.
+
+    Args:
+        seq: Sequence length.
+        head_dim: Attention head dim (alignment on the compiled path).
+        backend: Backend name; None uses the active JAX backend.
+
+    Returns:
+        The chosen tile side, or 0 when no candidate divides ``seq``
+        (the dispatch then falls back to the chunked XLA path).
+
+    Example:
+        >>> attn_block_q(64, 16, backend="cpu")   # interpret: nq=2 fold
+        32
+        >>> attn_block_q(4096, 128, backend="tpu")
+        128
+    """
+    from repro.kernels.policy import TPU_LANE, TPU_SUBLANE, default_interpret
+
+    interpret = default_interpret(backend)
+    divisors = [bq for bq in _ATTN_BLOCKS if bq <= seq and seq % bq == 0]
+    if not interpret:
+        divisors = [
+            bq for bq in divisors
+            if bq % TPU_SUBLANE == 0 and head_dim % TPU_LANE == 0
+        ]
+    if not divisors:
+        return 0
+    if interpret:
+        for bq in divisors:
+            if seq // bq >= 2:
+                return bq
+    return divisors[0]
+
+
+def _attn_model_scores(
+    nq: int, heads: int, head_dim: int, block_q: int
+) -> Dict[str, float]:
+    """Analytic prior (us) per attention executor at device constants.
+
+    Uses the roofline attention entries (``schedule_cost_model`` with
+    ``attn-*`` kinds): the fold halves block-pair visits vs the
+    bounding box, and the chunked XLA path pays the score-tile HBM
+    round-trip flash keeps in VMEM.
+    """
+    from repro.kernels.flash_attention import flash_grid_steps
+
+    tri = nq * (nq + 1) // 2
+    scores = {}
+    for kind in ("folded", "bb", "chunked"):
+        steps = heads * flash_grid_steps(
+            nq, "bb" if kind == "bb" else "folded"
+        )
+        scores[kind] = schedule_cost_model(
+            f"attn-{kind}", steps, m=2, n=nq, useful=heads * tri,
+            rho=block_q, head_dim=head_dim,
+        ) * 1e6
+    return scores
+
+
+def _measured_attn_scores(
+    nq: int, heads: int, kinds: Tuple[str, ...], backend: str, bench_file: str
+) -> Dict[str, float]:
+    """Scores (us) from recorded ATTN rows, rescaled by the steps ratio.
+
+    Mirrors ``_measured_scores``: only ``compiled: true`` rows count
+    (interpret-mode wall-clocks measure the emulator, not the machine).
+    """
+    try:
+        with open(bench_file) as f:
+            artifact = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    from repro.kernels.flash_attention import flash_grid_steps
+
+    best: Dict[str, Tuple[float, float]] = {}
+    for row in artifact.get("rows", []):
+        if row.get("test") != "ATTN" or row.get("map") not in kinds:
+            continue
+        if not row.get("compiled"):
+            continue
+        row_backend = row.get("backend")
+        if row_backend is not None and row_backend != backend:
+            continue
+        us = row.get("us_per_call")
+        steps_row = row.get("grid_steps")
+        if not us or not steps_row:
+            continue
+        kind = row["map"]
+        here = heads * flash_grid_steps(nq, "bb" if kind == "bb" else "folded")
+        scaled = float(us) * here / float(steps_row)
+        dist = abs(float(steps_row) - here)
+        if kind not in best or dist < best[kind][0]:
+            best[kind] = (dist, scaled)
+    return {k: v[1] for k, v in best.items()}
+
+
+def choose_attn_impl(
+    seq: int,
+    heads: int,
+    head_dim: int,
+    backend: Optional[str] = None,
+    *,
+    bench_path: Optional[str] = None,
+    cache_file: Optional[str] = None,
+    refresh: bool = False,
+) -> AttnDecision:
+    """Pick the causal-attention executor for (seq, heads, head_dim).
+
+    The dispatch decision ``models.attention.simplex_attention`` (and
+    ``ops.causal_flash_attention`` with ``kind='auto'``) resolves
+    through — cached on disk next to the schedule decisions.  Ranking:
+    measured ``compiled: true`` ATTN rows from ``BENCH_maps.json`` when
+    they cover every candidate, else the roofline attention prior
+    (``schedule_cost_model`` ``attn-*`` entries).  Two structural
+    guards override the ranking:
+
+    * no candidate tile divides ``seq`` (or the compiled path's 8x128
+      alignment fails) — the flash kernel cannot map the shape, so the
+      chunked XLA path wins as ``source='fallback'``;
+    * on interpret backends, ``heads x grid_steps`` beyond
+      ``ATTN_INTERPRET_STEP_CAP`` (env ``REPRO_ATTN_STEP_CAP``) — the
+      Pallas emulator pays ``INTERPRET_STEP_S`` per step, so huge
+      grids go to the chunked path; production (TPU/GPU) ignores the
+      cap.
+
+    Args:
+        seq: Sequence length (static under jit — decisions happen at
+            trace time).
+        heads: Query-head count per example.
+        head_dim: Attention head dimension.
+        backend: Backend name; None uses the active JAX backend.
+        bench_path: Bench artifact override (else env/default).
+        cache_file: Cache file override (else env/default).
+        refresh: Recompute even on a fresh cache hit.
+
+    Returns:
+        The winning ``AttnDecision`` (``.impl``/``.kind``/``.block_q``
+        are what the dispatch launches).
+
+    Example:
+        >>> import os
+        >>> _old = os.environ.get("REPRO_AUTOTUNE_DISABLE")
+        >>> os.environ["REPRO_AUTOTUNE_DISABLE"] = "1"  # hermetic
+        >>> d = choose_attn_impl(64, 4, 16, backend="cpu")
+        >>> (d.impl, d.kind, 64 % d.block_q)
+        ('flash', 'folded', 0)
+        >>> _ = (os.environ.pop("REPRO_AUTOTUNE_DISABLE") if _old is None
+        ...      else os.environ.update(REPRO_AUTOTUNE_DISABLE=_old))
+    """
+    from repro.kernels.flash_attention import flash_grid_steps
+    from repro.kernels.policy import default_interpret
+
+    backend = _backend(backend)
+    disabled = os.environ.get(_DISABLE_ENV, "").strip() == "1"
+    bench_file = bench_artifact_path(bench_path)
+    cpath = cache_path(cache_file)
+    key = f"attn,s={seq},h={heads},d={head_dim},backend={backend}"
+    fp = _fingerprint(bench_file)
+    jv = _jax_version()
+
+    if not disabled and not refresh:
+        entry = _load_cache(cpath)["entries"].get(key)
+        if (
+            entry is not None
+            and entry.get("jax_version") == jv
+            and entry.get("fingerprint") == fp
+        ):
+            return AttnDecision(
+                seq=seq, heads=heads, head_dim=head_dim, backend=backend,
+                impl=entry["impl"], kind=entry["kind"],
+                block_q=entry["block_q"], source="cache",
+                score_us=entry["score_us"],
+                scores_us=entry.get("scores_us", {}),
+                jax_version=jv, fingerprint=fp,
+            )
+
+    interpret = default_interpret(backend)
+    block = attn_block_q(seq, head_dim, backend)
+    nq = seq // block if block else 0
+    flash_ok = block > 0
+    if flash_ok and interpret:
+        cap = int(os.environ.get(_ATTN_CAP_ENV, "") or ATTN_INTERPRET_STEP_CAP)
+        flash_ok = heads * flash_grid_steps(nq, "folded") <= cap
+
+    if not flash_ok:
+        decision = AttnDecision(
+            seq=seq, heads=heads, head_dim=head_dim, backend=backend,
+            impl="chunked", kind="chunked", block_q=block,
+            source="fallback", score_us=0.0, scores_us={},
+            jax_version=jv, fingerprint=fp,
+        )
+    else:
+        kinds = ("folded", "bb", "chunked")
+        scores = _attn_model_scores(nq, heads, head_dim, block)
+        measured = _measured_attn_scores(nq, heads, kinds, backend, bench_file)
+        use_measured = set(kinds) <= set(measured)
+        merged = dict(measured) if use_measured else scores
+        winner = min(merged, key=merged.get)
+        decision = AttnDecision(
+            seq=seq, heads=heads, head_dim=head_dim, backend=backend,
+            impl="chunked" if winner == "chunked" else "flash",
+            kind=winner, block_q=block,
+            source="measured" if use_measured else "model",
+            score_us=merged[winner], scores_us=merged,
+            jax_version=jv, fingerprint=fp,
+        )
+    if not disabled:
+        cache = _load_cache(cpath)
+        row = asdict(decision)
+        for drop in ("seq", "heads", "head_dim", "backend"):
+            del row[drop]
         cache["entries"][key] = row
         _store_cache(cpath, cache)
     return decision

@@ -112,6 +112,11 @@ class ArchConfig:
     remat: str = "full"  # none | full | dots
     attention_chunk: int = 512  # XLA chunked-attention tile
     attention_schedule: str = "folded"  # folded (simplex) | bb (baseline)
+    # prefill/train attention executor: "auto" resolves through
+    # autotune.choose_attn_impl (Pallas flash vs chunked XLA);
+    # "flash" / "chunked" force a path, "flash-folded" / "flash-bb"
+    # additionally pin the kernel schedule (benchmarks — DESIGN.md §8)
+    attention_impl: str = "auto"
     # tensor-parallel width on the 'model' mesh axis.  16 = full TP
     # (default); 1 = fold the axis into FSDP/DP (right-sizes small
     # models: a 6B model on 256 chips needs no TP — §Perf iteration A2).

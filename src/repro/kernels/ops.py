@@ -139,16 +139,36 @@ simplex_accum_md_compiled = accum_md_compiled
     jax.jit, static_argnames=("kind", "block_q", "block_kv", "impl", "interpret")
 )
 def causal_flash_attention(
-    q, k, v, kind: str = "folded", block_q: int = 128, block_kv: int = 128,
+    q, k, v, kind: str = "auto", block_q: int = 0, block_kv: int = 0,
     impl: str = "pallas", interpret=None,
 ):
-    """Causal GQA attention.  impl='pallas' uses the simplex-grid kernel
-    (interpret mode resolved per backend — policy.default_interpret);
-    impl='xla' is the fused-XLA reference path used by the distributed
-    dry-run (Pallas TPU kernels cannot lower on the CPU backend —
-    DESIGN.md §5)."""
+    """Causal GQA attention through the policy-resolved flash kernel.
+
+    kind='auto' resolves schedule AND tile through the cached
+    ``autotune.choose_attn_impl(seq, heads, head_dim, backend)``
+    decision (an auto-resolved 'chunked' runs the fused-XLA reference);
+    kind='folded'/'bb' forces the schedule, with ``block_q``/``block_kv``
+    passed straight through to the kernel (0 = let autotune pick the
+    tile).  impl='pallas' launches the simplex-grid kernel with
+    interpret mode resolved per backend (policy.default_interpret);
+    impl='xla' forces the fused-XLA reference path used by the
+    distributed dry-run (Pallas TPU kernels cannot lower on the CPU
+    backend — DESIGN.md §5, §8)."""
     if impl == "xla":
         return ref.causal_attention(q, k, v)
+    if kind == "auto" or block_q <= 0:
+        from repro.autotune import choose_attn_impl
+
+        b, hq, s, d = q.shape
+        dec = choose_attn_impl(s, hq, d)
+        if kind == "auto":
+            if dec.impl != "flash" or dec.block_q <= 0:
+                return ref.causal_attention(q, k, v)
+            kind = dec.kind
+        if block_q <= 0:
+            if dec.block_q <= 0:
+                return ref.causal_attention(q, k, v)
+            block_q = block_kv = dec.block_q
     return flash_attention(
         q, k, v, kind=kind, block_q=block_q, block_kv=block_kv,
         interpret=interpret,

@@ -26,6 +26,7 @@ NEG_INF = -1e30
 
 __all__ = [
     "chunked_causal_attention",
+    "simplex_attention",
     "full_attention",
     "decode_attention",
     "attn_init",
@@ -199,19 +200,105 @@ def full_attention(q, k, v, *, chunk: int = 512, scale=None, mask=None):
     return out.reshape(b, hq, sq, dv).astype(q.dtype)
 
 
+def simplex_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    impl: str = "auto",
+    chunk: int = 512,
+    schedule: str = "folded",
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Causal attention through the backend-aware dispatch (DESIGN.md §8).
+
+    The production prefill/training entry: picks between the
+    folded-simplex Pallas flash kernel
+    (``kernels.flash_attention.flash_attention``) and the portable
+    chunked XLA realization (``chunked_causal_attention``), resolving
+    ``impl='auto'`` through the cached
+    ``autotune.choose_attn_impl(seq, heads, head_dim, backend)``
+    decision (roofline prior, measured ATTN rows when available, with
+    the interpret step cap as a safety valve).
+
+    Structural guards force the chunked path regardless of ``impl``:
+    MLA-style ``v_head_dim != qk head_dim`` (the flash kernel assumes
+    square tiles over one head dim) and ragged GQA group sizes.  The
+    decode strip stays on ``decode_attention`` — a 1-token query has
+    no simplex to fold (see the §8 decode-exclusion rationale).
+
+    Args:
+        q: Queries (B, Hq, S, D).
+        k: Keys (B, Hkv, S, D); Hq must be a multiple of Hkv (GQA).
+        v: Values (B, Hkv, S, Dv).
+        impl: 'auto' | 'flash' | 'chunked', plus the benchmark knobs
+            'flash-folded' / 'flash-bb' forcing the kernel schedule
+            (any forced flash still falls back when the kernel cannot
+            map the shape).
+        chunk: Chunk size for the XLA path.
+        schedule: 'folded' | 'bb' for the XLA path.
+        scale: Score scale; None = D**-0.5.
+        interpret: Pallas interpret override; None = policy default.
+
+    Returns:
+        Attention output, (B, Hq, S, Dv), in q's dtype.
+    """
+    if impl not in ("auto", "flash", "chunked", "flash-folded", "flash-bb"):
+        raise ValueError(
+            "impl must be 'auto', 'flash', 'chunked', 'flash-folded' or "
+            f"'flash-bb'; got {impl!r}"
+        )
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    flash_able = (
+        impl != "chunked" and v.shape[-1] == d and hkv > 0 and hq % hkv == 0
+    )
+    if flash_able:
+        from repro.autotune import choose_attn_impl
+
+        dec = choose_attn_impl(s, hq, d)
+        use_flash = dec.block_q > 0 and (
+            dec.impl == "flash" if impl == "auto" else True
+        )
+        if use_flash:
+            from repro.kernels.flash_attention import flash_attention
+
+            if "-" in impl:
+                kind = impl.split("-", 1)[1]
+            else:
+                kind = dec.kind if dec.kind in ("folded", "bb") else "folded"
+            return flash_attention(
+                q, k, v, kind=kind, block_q=dec.block_q,
+                block_kv=dec.block_q, scale=scale, interpret=interpret,
+            )
+    return chunked_causal_attention(
+        q, k, v, chunk=chunk, schedule=schedule, scale=scale
+    )
+
+
 def sharded_causal_attention(q, k, v, cfg, mesh):
     """Causal attention under explicit shard_map: q heads shard over
     'model', KV replicated and sliced locally to the group the shard's
     q heads need — so the folded schedule's tile gathers/scatters are
     *local* and GSPMD inserts zero collectives inside the scan (the
     §Perf fix for the per-step resharding pathology; see EXPERIMENTS.md
-    §Perf iteration A2)."""
+    §Perf iteration A2).
+
+    Single-device (mesh-less) calls — the serving/training hot path on
+    one chip — route through ``simplex_attention`` so prefill launches
+    the folded flash kernel by default; shard_map bodies keep the
+    chunked XLA realization (Pallas under GSPMD is out of the dispatch
+    contract — DESIGN.md §8)."""
     b, hq, s, d = q.shape
     hkv = k.shape[1]
     group = hq // hkv
     if mesh is None or "model" not in mesh.axis_names:
-        return chunked_causal_attention(
-            q, k, v, chunk=cfg.attention_chunk, schedule=cfg.attention_schedule
+        return simplex_attention(
+            q, k, v,
+            impl=getattr(cfg, "attention_impl", "auto"),
+            chunk=cfg.attention_chunk,
+            schedule=cfg.attention_schedule,
         )
     if getattr(cfg, "tp_size", 16) <= 1:
         # no TP: attention is batch-local; shard_map over ALL axes on
@@ -307,6 +394,7 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, *, scale=None):
 
 
 def attn_init(key, cfg, dtype):
+    """GQA projection params: wq (D, Hq*hd), wk/wv (D, Hkv*hd), wo."""
     d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
     k1, k2, k3, k4 = jax.random.split(key, 4)
     return {
@@ -373,6 +461,7 @@ def attn_apply(
 
 
 def init_kv_cache(cfg, batch, seq, dtype):
+    """Zeroed decode K/V cache pair, each (batch, Hkv, seq, hd)."""
     hkv, hd = cfg.n_kv_heads, cfg.hd
     return (
         jnp.zeros((batch, hkv, seq, hd), dtype),

@@ -87,6 +87,9 @@ def mla_apply(
             [k_nope, jnp.broadcast_to(k_pe_new[:, None], (b, h, s, m.qk_rope_dim))],
             axis=-1,
         )
+        # v_head_dim != qk head dim: the simplex_attention dispatch
+        # detects the rectangular value and keeps the chunked XLA path
+        # (the flash kernel maps square tiles only — DESIGN.md §8).
         o = sharded_causal_attention(q, k, v, cfg, mesh)  # (B,H,S,vd)
         out = jnp.dot(
             o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim),

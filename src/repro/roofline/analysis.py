@@ -47,6 +47,14 @@ PREDICATE_S = 1.0e-9  # the bb add-compare validity predicate
 LAUNCH_OVERHEAD_S = 5e-6  # fixed cost of one extra pallas_call launch
 HOST_ENUM_S = 2.5e-8  # host-side per-cell cost of an O(V) table build
 TABLE_AMORTIZE = 1000  # launches a built table is amortized over
+# Attention entries (DESIGN.md §8): per-block-pair scalar overheads of
+# the three causal-attention executors choose_attn_impl ranks.
+ATTN_FOLD_SELECT_S = 2 * SELECT_S  # the _folded_qkv where/compare pair
+ATTN_GATHER_S = SMEM_READ_S  # chunked-XLA per-step tile gather/scatter
+# Per-grid-step cost of the Pallas *interpreter* (emulated index_maps +
+# per-block dispatch) — the term that sends huge grids to the chunked
+# XLA path on interpret-only backends.
+INTERPRET_STEP_S = 2e-5
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -83,6 +91,7 @@ def schedule_cost_model(
     rho: int = 8,
     dtype_bytes: int = 4,
     hbm_bw: float = HBM_BW,
+    head_dim: int = 0,
 ) -> float:
     """Predicted seconds per launch of one schedule kind (memory-bound).
 
@@ -100,8 +109,20 @@ def schedule_cost_model(
       O(pieces) select chain (the term the per-piece launch split
       removes — see ``repro.autotune.should_split_pieces``).
 
+    Attention entries (DESIGN.md §8): kinds ``attn-folded`` /
+    ``attn-bb`` / ``attn-chunked`` model the causal-attention hot path
+    on the 2-simplex tile grid (``steps`` = block-pair visits, ``rho``
+    = the square score-tile side, ``head_dim`` = D).  Each step moves
+    three ``rho x head_dim`` operand tiles plus the output tile and
+    pays two ``rho x rho x head_dim`` MXU matmuls; the per-step scalar
+    overhead is the fold select chain (``attn-folded``), the causal
+    predicate on every bounding-box step (``attn-bb``), or the XLA
+    tile gather/scatter (``attn-chunked``).  This is the analytic
+    prior ``repro.autotune.choose_attn_impl`` ranks executors with
+    before measured ATTN rows exist.
+
     Args:
-        kind: Registered schedule kind.
+        kind: Registered schedule kind, or an ``attn-*`` entry.
         steps: Grid steps the schedule launches.
         m: Simplex dimension.
         n: Tile count per side.
@@ -110,10 +131,29 @@ def schedule_cost_model(
         rho: Tile side in elements.
         dtype_bytes: Element width.
         hbm_bw: Memory bandwidth to model against.
+        head_dim: Attention head dim (``attn-*`` kinds only).
 
     Returns:
         Predicted seconds for one launch of the full walk.
     """
+    if kind.startswith("attn-"):
+        d = head_dim or rho
+        tile_bytes = (3 * rho * d + rho * d) * dtype_bytes  # q,k,v in + o out
+        if kind == "attn-chunked":
+            # the XLA realization round-trips the (rho, rho) score tile
+            # through HBM between HLO ops; the Pallas kernel keeps it
+            # in VMEM — the structural reason flash wins on device.
+            tile_bytes += 2 * rho * rho * dtype_bytes
+        t_mem = steps * tile_bytes / hbm_bw
+        t_mxu = steps * 2 * (2 * rho * rho * d) / PEAK_FLOPS
+        per_step = {
+            "attn-folded": ATTN_FOLD_SELECT_S,
+            "attn-bb": PREDICATE_S,
+            "attn-chunked": ATTN_GATHER_S,
+        }.get(kind)
+        if per_step is None:
+            raise ValueError(f"unknown attention cost-model kind {kind!r}")
+        return t_mem + t_mxu + steps * per_step
     tile_bytes = 2 * (rho**m) * dtype_bytes  # read + write
     t_mem = steps * tile_bytes / hbm_bw
     if kind == "bb":

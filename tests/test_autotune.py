@@ -155,3 +155,94 @@ def test_should_split_pieces_threshold(monkeypatch):
     assert not should_split_pieces(2, 10**7)  # too few pieces
     assert not should_split_pieces(10, 100)  # chain cheaper than launches
     assert should_split_pieces(10, 10**7)
+
+
+# ---------------------------------------------------------------------------
+# Attention-impl decisions (ISSUE 9, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _attn_row(kind, us, steps, compiled=True, backend="tpu"):
+    return {
+        "test": "ATTN", "map": kind, "m": 2, "n": 32, "grid_steps": steps,
+        "us_per_call": us, "backend": backend, "jax_version": "x",
+        "compiled": compiled,
+    }
+
+
+def test_attn_decision_serve_shape_is_folded_flash(env, monkeypatch):
+    monkeypatch.delenv("REPRO_ATTN_STEP_CAP", raising=False)
+    d = T.choose_attn_impl(64, 4, 16, backend="cpu")
+    assert (d.impl, d.kind) == ("flash", "folded")
+    assert d.block_q == 32 and 64 % d.block_q == 0
+    assert d.source == "model" and set(d.scores_us) == {
+        "folded", "bb", "chunked"
+    }
+    data = json.loads(env["cache"].read_text())
+    assert "attn,s=64,h=4,d=16,backend=cpu" in data["entries"]
+    assert T.choose_attn_impl(64, 4, 16, backend="cpu").source == "cache"
+
+
+def test_attn_decision_compiled_backend_prefers_folded(env):
+    d = T.choose_attn_impl(4096, 32, 128, backend="tpu")
+    assert (d.impl, d.kind, d.block_q) == ("flash", "folded", 128)
+
+
+def test_attn_interpret_step_cap_falls_back(env, monkeypatch):
+    monkeypatch.delenv("REPRO_ATTN_STEP_CAP", raising=False)
+    d = T.choose_attn_impl(4096, 32, 128, backend="cpu")
+    assert (d.impl, d.source) == ("chunked", "fallback")
+    monkeypatch.setenv("REPRO_ATTN_STEP_CAP", "10000000")
+    d2 = T.choose_attn_impl(4096, 32, 128, backend="cpu", refresh=True)
+    assert d2.impl == "flash"
+
+
+def test_attn_unmappable_seq_falls_back(env):
+    d = T.choose_attn_impl(100, 4, 16, backend="cpu")  # no tile divides 100
+    assert (d.impl, d.kind, d.block_q) == ("chunked", "chunked", 0)
+    assert d.source == "fallback"
+
+
+def test_attn_compiled_lane_alignment_falls_back(env):
+    # head_dim 64 misses the 8x128 Mosaic lane contract on compiled
+    # backends -> chunked (interpret hosts may still map it).
+    d = T.choose_attn_impl(4096, 8, 64, backend="tpu")
+    assert (d.impl, d.source) == ("chunked", "fallback")
+
+
+def test_attn_measured_rows_win(env):
+    from repro.kernels.flash_attention import flash_grid_steps
+
+    heads = 32
+    steps_f = heads * flash_grid_steps(32, "folded")
+    steps_b = heads * flash_grid_steps(32, "bb")
+    env["bench"].write_text(json.dumps(_bench_artifact([
+        _attn_row("folded", 500.0, steps_f),
+        _attn_row("bb", 600.0, steps_b),
+        _attn_row("chunked", 10.0, steps_f),
+    ])))
+    d = T.choose_attn_impl(4096, heads, 128, backend="tpu")
+    assert (d.impl, d.kind, d.source) == ("chunked", "chunked", "measured")
+
+
+def test_attn_partial_measured_coverage_keeps_model(env):
+    env["bench"].write_text(json.dumps(_bench_artifact([
+        _attn_row("chunked", 10.0, 1000),
+    ])))
+    d = T.choose_attn_impl(4096, 32, 128, backend="tpu")
+    assert d.source == "model" and d.kind == "folded"
+
+
+def test_attn_interpret_measured_rows_are_ignored(env):
+    rows = [_attn_row(k, 1.0, 1000, compiled=False)
+            for k in ("folded", "bb", "chunked")]
+    env["bench"].write_text(json.dumps(_bench_artifact(rows)))
+    d = T.choose_attn_impl(4096, 32, 128, backend="tpu")
+    assert d.source == "model"
+
+
+def test_attn_block_q_shapes():
+    assert T.attn_block_q(64, 16, backend="cpu") == 32  # nq>=2 preferred
+    assert T.attn_block_q(4096, 128, backend="tpu") == 128
+    assert T.attn_block_q(100, 16, backend="cpu") == 0  # nothing divides
+    assert T.attn_block_q(4096, 64, backend="tpu") == 0  # lane misaligned

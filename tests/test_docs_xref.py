@@ -28,10 +28,32 @@ def test_design_has_sections():
 def test_all_src_design_xrefs_exist():
     secs = design_sections()
     bad = []
-    for path in sorted((REPO / "src").rglob("*.py")):
-        for ref in XREF_RE.findall(path.read_text()):
-            if ref not in secs:
-                bad.append((str(path.relative_to(REPO)), ref))
+    for root in ("src", "benchmarks", "scripts"):
+        for path in sorted((REPO / root).rglob("*.py")):
+            for ref in XREF_RE.findall(path.read_text()):
+                if ref not in secs:
+                    bad.append((str(path.relative_to(REPO)), ref))
     assert not bad, (
         f"stale DESIGN.md cross-references (existing: {sorted(secs)}): {bad}"
     )
+
+
+def test_design_s8_attention_hot_path():
+    # ISSUE 9: §8 documents the serving dispatch contract the code
+    # points at (simplex_attention, choose_attn_impl, the fold diagram,
+    # the decode exclusion).
+    assert "§8" in design_sections()
+    text = (REPO / "DESIGN.md").read_text()
+    s8 = text.split("## §8", 1)[1]
+    for needle in ("simplex_attention", "choose_attn_impl", "self-pair",
+                   "bh // (Hq/Hkv)", "decode"):
+        assert needle in s8, f"DESIGN.md §8 lost its {needle!r} contract"
+
+
+def test_readme_serving_quickstart():
+    text = (REPO / "README.md").read_text()
+    assert "## Serving-benchmark quickstart" in text
+    quick = text.split("## Serving-benchmark quickstart", 1)[1]
+    for needle in ("serve_lm.py", "attention_impl", "DESIGN.md §8",
+                   "test_flash_parity.py"):
+        assert needle in quick, f"README serving quickstart lost {needle!r}"

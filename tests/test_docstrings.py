@@ -52,3 +52,11 @@ def test_checkpointing_doctests():
 
     result = doctest.testmod(repro.checkpoint.checkpointing, verbose=False)
     assert result.failed == 0 and result.attempted > 0
+
+
+def test_flash_attention_doctests():
+    # ISSUE 9 brings the attention hot path into the gate (DESIGN.md §8)
+    import repro.kernels.flash_attention
+
+    result = doctest.testmod(repro.kernels.flash_attention, verbose=False)
+    assert result.failed == 0 and result.attempted > 0

@@ -255,19 +255,28 @@ def test_folded_causal_pairs_rejects_nonpositive():
         folded_causal_pairs(0)
 
 
-def test_flash_grid_steps_odd_raises():
-    with pytest.raises(ValueError, match="even"):
-        flash_grid_steps(5, "folded")
+def test_flash_grid_steps_odd_self_pair_fold():
+    # ISSUE 9: odd tile counts fold through the self-pair middle walk
+    # (mirroring folded_causal_pairs) instead of raising.
+    assert flash_grid_steps(5, "folded") == 18  # ceil(5/2) * (5+1)
+    assert flash_grid_steps(3, "folded") == 8
     assert flash_grid_steps(5, "bb") == 25
     assert flash_grid_steps(4, "folded") == 10
+    with pytest.raises(ValueError):
+        flash_grid_steps(0, "folded")
+    with pytest.raises(ValueError):
+        flash_grid_steps(4, "zigzag")
 
 
-def test_flash_attention_odd_tiles_clear_error():
+def test_flash_attention_odd_tiles_runs():
     from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import chunked_causal_attention
 
-    q = np.zeros((1, 1, 24, 8), np.float32)
-    with pytest.raises(ValueError, match="even"):
-        flash_attention(
-            jax.numpy.asarray(q), jax.numpy.asarray(q),
-            jax.numpy.asarray(q), kind="folded", block_q=8, block_kv=8,
-        )
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 1, 24, 8), jax.numpy.float32)
+    k = jax.random.normal(ks[1], (1, 1, 24, 8), jax.numpy.float32)
+    v = jax.random.normal(ks[2], (1, 1, 24, 8), jax.numpy.float32)
+    got = flash_attention(q, k, v, kind="folded", block_q=8, block_kv=8)
+    want = chunked_causal_attention(q, k, v, chunk=8)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
