@@ -1,0 +1,23 @@
+#!/usr/bin/env python
+"""Static verifier for Pallas kernels and simplex schedules.
+
+Thin CLI wrapper over ``repro.analysis`` (DESIGN.md §9).  Usage::
+
+    PYTHONPATH=src python scripts/simplexlint.py            # text report
+    PYTHONPATH=src python scripts/simplexlint.py --json     # CI report
+    PYTHONPATH=src python scripts/simplexlint.py --fix      # mechanical fixes
+    PYTHONPATH=src python scripts/simplexlint.py --list     # pass inventory
+
+Exits 0 when every registered pass is clean, 1 on any finding.
+"""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(["--root", str(REPO)] + sys.argv[1:]))

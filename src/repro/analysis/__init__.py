@@ -1,0 +1,45 @@
+"""``simplexlint`` — static verification of kernels and schedules.
+
+The repo's correctness-tooling layer (DESIGN.md §9): a pass registry
+(``analysis/registry.py``) whose AST/policy passes enforce source-tree
+contracts (the ``pallas_call`` front door, no hardcoded
+``interpret=True``, warn-and-delegate shims, resolvable DESIGN.md
+§-xrefs, 8x128-aligned tile constants) and whose semantic passes replay
+schedule step lists and BlockSpec index maps symbolically — write-race
+detection, bijectivity/out-of-bounds verification for every registered
+schedule kind (shard views included), and halo-stencil conformance for
+every registered kernel body.  No Pallas launch anywhere.
+
+Consumers: ``scripts/simplexlint.py`` (CLI; ``--fix``, ``--json``),
+``tests/test_simplexlint.py`` (the tier-1 pytest bridge), and the CI
+workflow's ``simplexlint`` step.
+
+Example:
+    >>> from repro.analysis import registered_passes
+    >>> sorted(p in registered_passes() for p in
+    ...        ("write-race", "schedule-bijectivity", "halo-conformance"))
+    [True, True, True]
+"""
+
+from . import ast_passes, halo_passes, schedule_passes  # noqa: F401 (self-registration)
+from .registry import (
+    Finding,
+    LintContext,
+    Pass,
+    findings_to_json,
+    get_pass,
+    register_pass,
+    registered_passes,
+    run_passes,
+)
+
+__all__ = [
+    "Finding",
+    "LintContext",
+    "Pass",
+    "findings_to_json",
+    "get_pass",
+    "register_pass",
+    "registered_passes",
+    "run_passes",
+]

@@ -1,0 +1,315 @@
+"""AST/policy passes: source-tree contracts of the kernels stack.
+
+Five contracts, each previously enforced ad hoc (two as AST snippets in
+``tests/test_compiled.py``, the §-xref audit in ``tests/test_docs_xref``,
+the rest only by review) and now first-class registry passes
+(DESIGN.md §9):
+
+* ``pallas-front-door`` — ``pl.pallas_call`` is constructed only inside
+  ``kernels/engine.py`` (the ``pallas_launch`` front door) and
+  ``kernels/compiled.py``; every other module must launch through the
+  engine so the execution policy cannot be bypassed.
+* ``hardcoded-interpret`` — no call site pins ``interpret=True``; the
+  mode must thread through ``kernels/policy.py`` (mechanically fixable
+  to ``interpret=None``).
+* ``shim-deprecation`` — anything documented as deprecated must
+  warn-and-delegate: raise ``DeprecationWarning`` (directly or via a
+  module-local helper) and return a delegating call, never reimplement
+  or silently alias.
+* ``design-xref`` — every ``DESIGN.md §x[.y]`` string in the tree
+  resolves to an existing DESIGN.md section header.
+* ``tile-alignment`` — module-level tile/block constants satisfy the
+  Mosaic 8x128 contract of ``kernels/policy.py`` (ints multiples of the
+  sublane; shape tuples accepted by ``tile_alignment_ok``).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import List
+
+from .registry import Finding, LintContext, register_pass
+
+__all__ = [
+    "PALLAS_ALLOWED",
+    "design_sections",
+]
+
+# Basenames allowed to construct pl.pallas_call (the front door and the
+# fused-XLA module, which owns its own jit programs).
+PALLAS_ALLOWED = ("engine.py", "compiled.py")
+
+_SECTION_RE = re.compile(r"^#{2,}\s+(§\d+(?:\.\d+)?)\b", re.MULTILINE)
+_XREF_RE = re.compile(r"DESIGN\.md\s+(§\d+(?:\.\d+)?)")
+_TILE_NAME_RE = re.compile(r"(?:^|_)(?:TILE|BLOCK)S?(?:_|$)")
+
+
+def design_sections(repo_root: pathlib.Path) -> set:
+    """Section anchors (``§N`` / ``§N.M``) present in DESIGN.md.
+
+    Args:
+        repo_root: Directory containing DESIGN.md.
+
+    Returns:
+        Set of anchor strings; empty when DESIGN.md is absent.
+    """
+    path = repo_root / "DESIGN.md"
+    if not path.exists():
+        return set()
+    return set(_SECTION_RE.findall(path.read_text()))
+
+
+@register_pass(
+    "pallas-front-door", "ast",
+    "pl.pallas_call constructed only in kernels/engine.py+compiled.py",
+)
+def _pallas_front_door(ctx: LintContext) -> List[Finding]:
+    out = []
+    for py in ctx.python_sources():
+        if py.name in PALLAS_ALLOWED:
+            continue
+        _, tree = ctx.parsed(py)
+        for node in ast.walk(tree):
+            hit = (
+                isinstance(node, ast.Attribute)
+                and node.attr == "pallas_call"
+            ) or (isinstance(node, ast.Name) and node.id == "pallas_call")
+            if hit:
+                out.append(Finding(
+                    "pallas-front-door", ctx.rel(py), node.lineno,
+                    "pallas_call constructed outside the engine front "
+                    "door — route through engine.pallas_launch",
+                ))
+    return out
+
+
+def _fix_hardcoded_interpret(ctx: LintContext,
+                             findings: List[Finding]) -> int:
+    """Rewrite each flagged ``interpret=True`` to ``interpret=None``."""
+    by_path = {}
+    for f in findings:
+        by_path.setdefault(f.path, []).append(f)
+    fixed = 0
+    for rel, fs in by_path.items():
+        path = ctx.repo_root / rel
+        lines = path.read_text().splitlines(keepends=True)
+        for f in fs:
+            i = f.line - 1
+            new = re.sub(r"interpret\s*=\s*True", "interpret=None",
+                         lines[i])
+            if new != lines[i]:
+                lines[i] = new
+                fixed += 1
+        path.write_text("".join(lines))
+    return fixed
+
+
+@register_pass(
+    "hardcoded-interpret", "ast",
+    "no call site pins interpret=True (policy.py resolves the mode)",
+    fix=_fix_hardcoded_interpret,
+)
+def _hardcoded_interpret(ctx: LintContext) -> List[Finding]:
+    out = []
+    for py in ctx.python_sources():
+        _, tree = ctx.parsed(py)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if (
+                    kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                ):
+                    out.append(Finding(
+                        "hardcoded-interpret", ctx.rel(py), node.lineno,
+                        "hardcodes interpret=True — pass interpret=None "
+                        "and let kernels/policy.py resolve the backend",
+                        fixable=True,
+                    ))
+    return out
+
+
+def _warns_deprecation(fn: ast.AST, helpers: set) -> bool:
+    """True when the function body raises DeprecationWarning (directly
+    via ``warnings.warn`` or through a module-local warn helper)."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func
+        name = (
+            callee.attr if isinstance(callee, ast.Attribute)
+            else callee.id if isinstance(callee, ast.Name) else None
+        )
+        if name in helpers:
+            return True
+        if name == "warn":
+            names = {
+                n.id for n in ast.walk(node) if isinstance(n, ast.Name)
+            }
+            if "DeprecationWarning" in names:
+                return True
+    return False
+
+
+def _delegates(fn: ast.AST) -> bool:
+    """True when the body returns (or tail-calls) a delegating call."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(
+            node.value, ast.Call
+        ):
+            return True
+    return False
+
+
+@register_pass(
+    "shim-deprecation", "ast",
+    "deprecated entry points must warn (DeprecationWarning) and delegate",
+)
+def _shim_deprecation(ctx: LintContext) -> List[Finding]:
+    out = []
+    for py in ctx.python_sources():
+        _, tree = ctx.parsed(py)
+        # module-local helpers that themselves raise DeprecationWarning
+        helpers = {
+            node.name
+            for node in tree.body
+            if isinstance(node, ast.FunctionDef)
+            and _warns_deprecation(node, set())
+        }
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                doc = ast.get_docstring(node) or ""
+                if "deprecated" not in doc.lower():
+                    continue
+                inits = [
+                    n for n in node.body
+                    if isinstance(n, ast.FunctionDef)
+                    and n.name == "__init__"
+                ]
+                if not inits or not _warns_deprecation(inits[0], helpers):
+                    out.append(Finding(
+                        "shim-deprecation", ctx.rel(py), node.lineno,
+                        f"deprecated class {node.name!r} must emit a "
+                        "DeprecationWarning in __init__",
+                    ))
+            elif isinstance(node, ast.FunctionDef):
+                doc = ast.get_docstring(node) or ""
+                if not doc.lower().startswith("deprecated"):
+                    continue
+                if not _warns_deprecation(node, helpers):
+                    out.append(Finding(
+                        "shim-deprecation", ctx.rel(py), node.lineno,
+                        f"deprecated shim {node.name!r} must emit a "
+                        "DeprecationWarning before delegating",
+                    ))
+                elif not _delegates(node):
+                    out.append(Finding(
+                        "shim-deprecation", ctx.rel(py), node.lineno,
+                        f"deprecated shim {node.name!r} must delegate "
+                        "(return the replacement's result), not "
+                        "reimplement",
+                    ))
+    return out
+
+
+@register_pass(
+    "design-xref", "ast",
+    "every 'DESIGN.md §x' cross-reference resolves to a real section",
+)
+def _design_xref(ctx: LintContext) -> List[Finding]:
+    secs = design_sections(ctx.repo_root)
+    out = []
+    targets = list(ctx.python_sources())
+    for extra in ("scripts", "benchmarks", "examples", "tests"):
+        root = ctx.repo_root / extra
+        if root.exists() and not ctx.src_root.is_relative_to(root):
+            targets.extend(
+                p for p in sorted(root.rglob("*.py"))
+                # fixtures_lint holds intentionally-stale references that
+                # the fixture tests feed back through this pass.
+                if "fixtures_lint" not in p.parts
+            )
+    readme = ctx.repo_root / "README.md"
+    texts = [(p, p.read_text()) for p in targets]
+    if readme.exists():
+        texts.append((readme, readme.read_text()))
+    for path, text in texts:
+        for i, line in enumerate(text.splitlines(), start=1):
+            for ref in _XREF_RE.findall(line):
+                if ref not in secs:
+                    out.append(Finding(
+                        "design-xref", ctx.rel(path), i,
+                        f"stale cross-reference DESIGN.md {ref} "
+                        f"(existing sections: {sorted(secs)})",
+                    ))
+    return out
+
+
+def _const_ints(node: ast.AST):
+    """Int literals of a constant int/tuple/list assignment (else None)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return [node.value], False
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for elt in node.elts:
+            if not (
+                isinstance(elt, ast.Constant)
+                and isinstance(elt.value, int)
+                and not isinstance(elt.value, bool)
+            ):
+                return None
+            vals.append(elt.value)
+        return vals, True
+    return None
+
+
+@register_pass(
+    "tile-alignment", "ast",
+    "module-level tile/block constants satisfy the 8x128 contract",
+)
+def _tile_alignment(ctx: LintContext) -> List[Finding]:
+    from repro.kernels.policy import TPU_SUBLANE, tile_alignment_ok
+
+    out = []
+    for py in ctx.python_sources():
+        _, tree = ctx.parsed(py)
+        for node in tree.body:
+            if not isinstance(node, ast.Assign):
+                continue
+            targets = [
+                t.id for t in node.targets if isinstance(t, ast.Name)
+            ]
+            name = next(
+                (t for t in targets
+                 if t.isupper() and _TILE_NAME_RE.search(t)),
+                None,
+            )
+            if name is None:
+                continue
+            parsed = _const_ints(node.value)
+            if parsed is None:
+                continue
+            vals, is_seq = parsed
+            if is_seq and ("SHAPE" in name or "TILE" in name) \
+                    and len(vals) >= 2:
+                if not tile_alignment_ok(vals):
+                    out.append(Finding(
+                        "tile-alignment", ctx.rel(py), node.lineno,
+                        f"{name} = {tuple(vals)} violates the compiled "
+                        "8x128 block-shape contract "
+                        "(kernels/policy.check_tile_alignment)",
+                    ))
+                continue
+            for v in vals:
+                if v % TPU_SUBLANE != 0:
+                    out.append(Finding(
+                        "tile-alignment", ctx.rel(py), node.lineno,
+                        f"{name} contains {v}, not a multiple of the "
+                        f"{TPU_SUBLANE}-row sublane (kernels/policy.py)",
+                    ))
+    return out

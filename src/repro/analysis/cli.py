@@ -1,0 +1,105 @@
+"""Command-line front end of ``simplexlint`` (DESIGN.md §9).
+
+``scripts/simplexlint.py`` delegates here.  Modes:
+
+* default — human-readable findings, one per line, exit 1 on any;
+* ``--json`` — the stable CI report (``findings_to_json`` schema);
+* ``--fix`` — apply mechanical fixers (e.g. ``interpret=True`` ->
+  ``interpret=None``) then re-run, reporting only what remains;
+* ``--passes a,b`` / ``--list`` — subset selection and discovery.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import Optional, Sequence
+
+from .registry import (
+    findings_to_json,
+    get_pass,
+    registered_passes,
+    run_passes,
+)
+
+__all__ = ["main"]
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """Run the pass registry and report findings.
+
+    Args:
+        argv: CLI arguments (default ``sys.argv[1:]``).
+
+    Returns:
+        Process exit code: 0 when every pass is clean, 1 otherwise.
+    """
+    ap = argparse.ArgumentParser(
+        prog="simplexlint",
+        description="static verifier for Pallas kernels and simplex "
+        "schedules (DESIGN.md §9)",
+    )
+    ap.add_argument(
+        "--root", default=None,
+        help="repository root (default: auto-detect from this file)",
+    )
+    ap.add_argument(
+        "--passes", default=None,
+        help="comma-separated pass subset (default: all)",
+    )
+    ap.add_argument(
+        "--json", action="store_true",
+        help="emit the CI JSON report instead of text findings",
+    )
+    ap.add_argument(
+        "--fix", action="store_true",
+        help="apply mechanical fixers, then report what remains",
+    )
+    ap.add_argument(
+        "--list", action="store_true", dest="list_passes",
+        help="list registered passes and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.root is not None:
+        root = pathlib.Path(args.root).resolve()
+    else:
+        root = pathlib.Path(__file__).resolve().parents[3]
+        if root.name == "src":
+            root = root.parent
+
+    names = (
+        [p.strip() for p in args.passes.split(",") if p.strip()]
+        if args.passes else list(registered_passes())
+    )
+    unknown = [n for n in names if n not in registered_passes()]
+    if unknown:
+        print(
+            f"simplexlint: unknown pass(es) {unknown}; registered: "
+            f"{', '.join(registered_passes())}",
+            file=sys.stderr,
+        )
+        return 2
+    if args.list_passes:
+        for name in names:
+            p = get_pass(name)
+            fixable = " [fixable]" if p.fix is not None else ""
+            print(f"{name:22s} {p.family:8s} {p.description}{fixable}")
+        return 0
+
+    findings = run_passes(root, passes=names, fix=args.fix)
+    if args.json:
+        print(findings_to_json(findings, names))
+    else:
+        for f in findings:
+            print(f.format())
+        print(
+            f"simplexlint: {len(findings)} finding(s) from "
+            f"{len(names)} pass(es)"
+        )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via scripts/
+    sys.exit(main())

@@ -1,0 +1,250 @@
+"""Pass registry and finding model of ``simplexlint`` (DESIGN.md §9).
+
+The static-analysis subsystem is a flat registry of *passes*.  A pass is
+a named callable ``run(ctx) -> list[Finding]`` over a ``LintContext``
+(repo root + parsed-source cache); mechanical passes may also carry a
+``fix(ctx, findings) -> int`` hook that rewrites sources in place.
+Passes register themselves at import time via ``register_pass`` — the
+CLI (``scripts/simplexlint.py``), the pytest bridge
+(``tests/test_simplexlint.py``) and CI all run the same registry, so a
+new pass is inherited by every consumer for free.
+
+Two pass families ship (DESIGN.md §9):
+
+* **AST/policy passes** (``analysis/ast_passes.py``) — source-tree
+  contracts: the ``pallas_call`` front door, no hardcoded
+  ``interpret=True``, warn-and-delegate deprecation shims, resolvable
+  DESIGN.md §-xrefs, 8x128-aligned tile constants.
+* **Semantic passes** (``analysis/schedule_passes.py``,
+  ``analysis/halo_passes.py``) — schedule step lists and BlockSpec
+  index maps replayed symbolically over small (m, n) grids, no Pallas
+  launch: write-race detection, bijectivity/out-of-bounds, and
+  halo-stencil conformance.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding",
+    "LintContext",
+    "Pass",
+    "register_pass",
+    "registered_passes",
+    "get_pass",
+    "run_passes",
+    "findings_to_json",
+]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One verified violation a pass reports.
+
+    Attributes:
+        pass_name: Name of the reporting pass.
+        path: Repo-relative file path, or a ``<semantic:...>`` locator
+            for schedule/kernel findings with no single source line.
+        line: 1-based source line (0 for semantic findings).
+        message: Human-readable statement of the violation.
+        fixable: True when the owning pass can rewrite it mechanically.
+    """
+
+    pass_name: str
+    path: str
+    line: int
+    message: str
+    fixable: bool = False
+
+    def format(self) -> str:
+        """``path:line: [pass] message`` — the CLI's text row."""
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.pass_name}] {self.message}"
+
+
+@dataclass
+class LintContext:
+    """Everything a pass may inspect (filled once per run).
+
+    Attributes:
+        repo_root: Repository root (DESIGN.md, scripts/, benchmarks/).
+        src_root: Python tree the AST passes scan (``src/repro``).
+        cache: Per-run scratch shared between passes (parsed ASTs).
+    """
+
+    repo_root: pathlib.Path
+    src_root: pathlib.Path
+    cache: Dict[str, object] = field(default_factory=dict)
+
+    def python_sources(self) -> List[pathlib.Path]:
+        """Sorted ``*.py`` files under ``src_root`` (cached per run)."""
+        if "py_sources" not in self.cache:
+            self.cache["py_sources"] = sorted(self.src_root.rglob("*.py"))
+        return self.cache["py_sources"]
+
+    def parsed(self, path: pathlib.Path):
+        """The (source text, ast.Module) pair of ``path`` (cached)."""
+        import ast
+
+        key = f"ast:{path}"
+        if key not in self.cache:
+            text = path.read_text()
+            self.cache[key] = (text, ast.parse(text))
+        return self.cache[key]
+
+    def rel(self, path: pathlib.Path) -> str:
+        """``path`` relative to the repo root, as a forward-slash str."""
+        try:
+            return path.relative_to(self.repo_root).as_posix()
+        except ValueError:
+            return str(path)
+
+
+@dataclass(frozen=True)
+class Pass:
+    """A registered analysis pass.
+
+    Attributes:
+        name: Registry key (kebab-case, e.g. ``"write-race"``).
+        family: ``'ast'`` (source contracts) or ``'semantic'``
+            (schedule/kernel evaluation).
+        run: ``run(ctx) -> list[Finding]``.
+        description: One-line summary shown by ``--list``.
+        fix: Optional mechanical rewriter
+            ``fix(ctx, findings) -> fixed_count``.
+    """
+
+    name: str
+    family: str
+    run: Callable[[LintContext], List["Finding"]]
+    description: str
+    fix: Optional[Callable[[LintContext, List["Finding"]], int]] = None
+
+
+_PASSES: Dict[str, Pass] = {}
+
+
+def register_pass(name: str, family: str, description: str,
+                  fix: Optional[Callable] = None):
+    """Register an analysis pass under ``name``.
+
+    Args:
+        name: Unique pass name.
+        family: ``'ast'`` or ``'semantic'``.
+        description: One-line summary.
+        fix: Optional mechanical fixer hook.
+
+    Returns:
+        A decorator recording ``run(ctx) -> list[Finding]`` and
+        returning it unchanged.  Usage::
+
+            @register_pass("my-pass", "ast", "what it checks")
+            def _run(ctx): ...
+
+    Example:
+        >>> import repro.analysis  # passes self-register on import
+        >>> "write-race" in registered_passes()
+        True
+    """
+    if family not in ("ast", "semantic"):
+        raise ValueError(f"unknown pass family {family!r}")
+
+    def _deco(run):
+        _PASSES[name] = Pass(
+            name=name, family=family, run=run,
+            description=description, fix=fix,
+        )
+        return run
+
+    return _deco
+
+
+def registered_passes() -> Tuple[str, ...]:
+    """Sorted names of every registered pass."""
+    return tuple(sorted(_PASSES))
+
+
+def get_pass(name: str) -> Pass:
+    """Resolve a pass by name (``ValueError`` on unknown names)."""
+    if name not in _PASSES:
+        raise ValueError(
+            f"no pass named {name!r}; registered: {registered_passes()}"
+        )
+    return _PASSES[name]
+
+
+def run_passes(
+    repo_root, src_root=None, passes: Optional[Sequence[str]] = None,
+    fix: bool = False,
+) -> List[Finding]:
+    """Run (a subset of) the registry and return surviving findings.
+
+    Args:
+        repo_root: Repository root directory.
+        src_root: Python tree for AST passes; defaults to
+            ``repo_root / "src" / "repro"``.
+        passes: Pass names to run (default: all, sorted).
+        fix: Apply each pass's mechanical fixer to its fixable
+            findings, then re-run that pass; only unfixed findings are
+            returned.
+
+    Returns:
+        All findings, in registry order.
+    """
+    repo_root = pathlib.Path(repo_root).resolve()
+    if src_root is None:
+        src_root = repo_root / "src" / "repro"
+    names = list(passes) if passes is not None else list(registered_passes())
+    out: List[Finding] = []
+    for name in names:
+        p = get_pass(name)
+        ctx = LintContext(repo_root=repo_root,
+                          src_root=pathlib.Path(src_root))
+        found = p.run(ctx)
+        if fix and p.fix is not None and any(f.fixable for f in found):
+            p.fix(ctx, [f for f in found if f.fixable])
+            ctx = LintContext(repo_root=repo_root,
+                              src_root=pathlib.Path(src_root))
+            found = p.run(ctx)
+        out.extend(found)
+    return out
+
+
+def findings_to_json(findings: Sequence[Finding],
+                     passes: Sequence[str]) -> str:
+    """The CI-facing JSON report (stable schema, version 1).
+
+    Args:
+        findings: Findings to serialize.
+        passes: Names of the passes that ran.
+
+    Returns:
+        A JSON document with ``version``/``passes``/``counts``/
+        ``findings`` keys; ``findings`` rows mirror the ``Finding``
+        dataclass.
+    """
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.pass_name] = counts.get(f.pass_name, 0) + 1
+    return json.dumps(
+        {
+            "version": 1,
+            "passes": list(passes),
+            "counts": counts,
+            "findings": [
+                {
+                    "pass": f.pass_name,
+                    "path": f.path,
+                    "line": f.line,
+                    "message": f.message,
+                    "fixable": f.fixable,
+                }
+                for f in findings
+            ],
+        },
+        indent=2,
+    )

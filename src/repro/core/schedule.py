@@ -59,12 +59,42 @@ __all__ = [
     "register_schedule",
     "registered_kinds",
     "resolve_kind",
+    "step_grid_indices",
     "Schedule2D",
     "schedule2d_table",
     "schedule3d_table",
     "folded_causal_pairs",
     "grid_steps",
 ]
+
+
+def step_grid_indices(sched) -> Tuple[np.ndarray, ...]:
+    """Per-axis grid indices of every step — the pass-visible enumeration.
+
+    The static-analysis passes (``repro.analysis``, DESIGN.md §9) replay
+    a schedule's walk without launching Pallas by feeding these arrays
+    straight into ``sched.map`` — exactly the linearization the kernels
+    use (grid axis 0 fastest; for m=2 grids ``(w, h)``: wy-major, wx
+    within).  Works for any object with the schedule surface
+    (``SimplexSchedule``, ``_PieceSchedule``, ``ShardSchedule``).
+
+    Args:
+        sched: Any schedule exposing ``.grid`` and ``.steps``.
+
+    Returns:
+        One int64 array of length ``sched.steps`` per grid axis.
+
+    Example:
+        >>> ws = step_grid_indices(SimplexSchedule(2, 4, "hmap"))
+        >>> len(ws), ws[0].shape
+        (2, (10,))
+    """
+    lin = np.arange(sched.steps, dtype=np.int64)
+    ws = []
+    for g in sched.grid:
+        ws.append(lin % g)
+        lin = lin // g
+    return tuple(ws)
 
 
 # ---------------------------------------------------------------------------
@@ -320,11 +350,7 @@ class SimplexSchedule:
             tab = self.prefetch
             valid = np.ones((len(tab), 1), dtype=np.int32)
             return np.concatenate([tab.astype(np.int32), valid], axis=1)
-        lin = np.arange(self.steps, dtype=np.int64)
-        ws = []
-        for g in self.grid:
-            ws.append(lin % g)
-            lin = lin // g
+        ws = step_grid_indices(self)
         out = self.map(*ws)
         coords, valid = out[:-1], out[-1]
         cols = [np.asarray(c) for c in coords]

@@ -77,6 +77,10 @@ __all__ = [
     "get_body",
     "pallas_launch",
     "domain_mask",
+    "halo_shifts",
+    "launch_shifts",
+    "out_block_transform",
+    "shift_block_transform",
     "map_table",
     "accum",
     "edm",
@@ -155,6 +159,94 @@ def domain_mask(m: int, n: int, coords: Sequence) -> jax.Array:
     for c in coords[1:]:
         total = total + c
     return total < n
+
+
+def halo_shifts(m: int) -> Tuple[Tuple[int, ...], ...]:
+    """The full 3^m block-offset stencil at dimension m.
+
+    Args:
+        m: Simplex dimension.
+
+    Returns:
+        All ``(-1, 0, 1)^m`` offset tuples, lexicographic order —
+        the neighborhood a ``halo = True`` body is assembled from.
+
+    Example:
+        >>> halo_shifts(2)[:3]
+        ((-1, -1), (-1, 0), (-1, 1))
+    """
+    return tuple(itertools.product((-1, 0, 1), repeat=m))
+
+
+def launch_shifts(body: "KernelBody", m: int) -> Tuple[Tuple[int, ...], ...]:
+    """Block offsets the engine actually fetches for ``body`` at dim m.
+
+    One shifted input ref is launched per offset: the full 3^m stencil
+    for halo bodies, the centre alone otherwise.  The halo-conformance
+    pass (``repro.analysis``, DESIGN.md §9) diffs this mechanism-side
+    set against the body's *declared* ``stencil(m)``.
+
+    Args:
+        body: The kernel body.
+        m: Simplex dimension.
+
+    Returns:
+        Offset tuples, centre ``(0,)*m`` always included.
+    """
+    return halo_shifts(m) if body.halo else ((0,) * m,)
+
+
+def out_block_transform(nb: int) -> Callable:
+    """The engine's output index-map transform: clip + trash-tile park.
+
+    Valid grid steps write their (clipped) block; invalid steps park at
+    the trash row ``nb`` appended along axis 0, so Pallas' end-of-step
+    flush never clobbers live data.  Shared by ``_launch_domain`` and
+    the write-race pass in ``repro.analysis`` so the analyzer verifies
+    the exact transform the launcher uses (DESIGN.md §9).
+
+    Args:
+        nb: Tile count per side (trash row index along axis 0).
+
+    Returns:
+        ``transform(blocks, coords, valid) -> block index tuple`` in
+        array-axis order.
+    """
+
+    def _t(blocks, coords, valid):
+        clipped = tuple(jnp.clip(b, 0, nb - 1) for b in blocks)
+        return (jnp.where(valid, clipped[0], nb),) + clipped[1:]
+
+    return _t
+
+
+def shift_block_transform(d: Tuple[int, ...], nb: int,
+                          boundary: str) -> Callable:
+    """The engine's input index-map transform for stencil offset ``d``.
+
+    ``'periodic'`` wraps block coordinates mod nb (the 2-simplex CA
+    convention); ``'free'`` clamps at the domain edge and parks invalid
+    steps at the trash row (the m >= 3 convention) — clamp duplicates
+    are masked inert by true coordinates at assembly time.
+
+    Args:
+        d: Block offset, one entry per array axis.
+        nb: Tile count per side.
+        boundary: ``'periodic'`` or ``'free'``.
+
+    Returns:
+        ``transform(blocks, coords, valid) -> block index tuple``.
+    """
+
+    def _t(blocks, coords, valid):
+        if boundary == "periodic":
+            return tuple((b + dj) % nb for b, dj in zip(blocks, d))
+        shifted = tuple(
+            jnp.clip(b + dj, 0, nb - 1) for b, dj in zip(blocks, d)
+        )
+        return (jnp.where(valid, shifted[0], nb),) + shifted[1:]
+
+    return _t
 
 
 def _axis_coords(blocks, rho: int, shape: Tuple[int, ...]):
@@ -314,6 +406,25 @@ class KernelBody:
         """Halo boundary mode at dimension m: 'periodic' or 'free'."""
         return "periodic" if m == 2 else "free"
 
+    def stencil(self, m: int) -> Tuple[Tuple[int, ...], ...]:
+        """The block-offset stencil this body's compute declares it reads.
+
+        Static-analysis metadata (DESIGN.md §9): the halo-conformance
+        pass diffs this declaration against the blocks the engine's
+        index maps actually fetch (``launch_shifts``).  The default is
+        honest for the shipped bodies — full 3^m when ``halo`` is set,
+        centre-only otherwise; a body whose ``tile`` reads fewer or
+        more neighbours than the halo machinery supplies must override
+        this so the declaration stays truthful.
+
+        Args:
+            m: Simplex dimension.
+
+        Returns:
+            Offset tuples, centre ``(0,)*m`` included.
+        """
+        return halo_shifts(m) if self.halo else ((0,) * m,)
+
     def seed(self, x, m: int):
         """(seed array, n): the domain-shaped array aliased to the
         output.  The default takes the operand itself (in-place
@@ -401,10 +512,7 @@ def _launch_domain(kernel: "SimplexKernel", body: KernelBody, x):
     nb = n // rho
     extras = body.extra_arrays(x, m)
 
-    shifts = (
-        list(itertools.product((-1, 0, 1), repeat=m)) if body.halo
-        else [(0,) * m]
-    )
+    shifts = list(launch_shifts(body, m))
     centre_idx = shifts.index((0,) * m)
     boundary = body.boundary(m)
 
@@ -419,24 +527,7 @@ def _launch_domain(kernel: "SimplexKernel", body: KernelBody, x):
                               body.element_local and not body.halo,
                               schedule=kernel.schedule):
         fn, table = sched.map, sched.prefetch
-
-        def _out_transform(blocks, coords, v):
-            clipped = tuple(jnp.clip(b, 0, nb - 1) for b in blocks)
-            return (jnp.where(v, clipped[0], nb),) + clipped[1:]
-
-        def _shift_transform(d):
-            def _t(blocks, coords, v):
-                if boundary == "periodic":
-                    return tuple(
-                        (b + dj) % nb for b, dj in zip(blocks, d)
-                    )
-                shifted = tuple(
-                    jnp.clip(b + dj, 0, nb - 1)
-                    for b, dj in zip(blocks, d)
-                )
-                return (jnp.where(v, shifted[0], nb),) + shifted[1:]
-
-            return _t
+        _out_transform = out_block_transform(nb)
 
         in_specs = [
             pl.BlockSpec(
@@ -444,7 +535,7 @@ def _launch_domain(kernel: "SimplexKernel", body: KernelBody, x):
                 _make_index_map(
                     fn,
                     _out_transform if d == (0,) * m
-                    else _shift_transform(d),
+                    else shift_block_transform(d, nb, boundary),
                 ),
             )
             for d in shifts

@@ -177,9 +177,21 @@ def causal_flash_attention(
 
 @functools.partial(jax.jit, static_argnames=("rho", "interpret"))
 def hmap_coords_mxu(wxy, rho: int = 1, interpret=None):
+    """MXU-path H-map: grid coords ``(w, x, y)`` -> block coords.
+
+    Thin jit'd wrapper over ``hmap_mxu.hmap2_coords_mxu`` (the matrix-
+    unit evaluation of the 2-simplex block map); ``interpret`` resolves
+    through ``kernels/policy.py`` like every other entry point.
+    """
     return hmap2_coords_mxu(wxy, rho=rho, interpret=interpret)
 
 
 def map_table(nb: int, kind: str = "hmap", m: int = 2):
-    """The MAP test's output: (steps, m+1) coordinate table."""
+    """The MAP test's output: (steps, m+1) coordinate table.
+
+    Example:
+        >>> import numpy as np
+        >>> np.asarray(map_table(2, kind="hmap")).shape  # tri(2) steps
+        (3, 3)
+    """
     return engine.map_table(nb, m=m, kind=kind)

@@ -34,6 +34,7 @@ __all__ = [
     "resolve_interpret",
     "backend_name",
     "check_tile_alignment",
+    "tile_alignment_ok",
     "aligned_rho",
     "TPU_SUBLANE",
     "TPU_LANE",
@@ -140,6 +141,26 @@ def check_tile_alignment(
             f"dimension to be a multiple of {TPU_SUBLANE}; got "
             f"{tuple(block_shape)}."
         )
+
+
+def tile_alignment_ok(block_shape: Sequence[int]) -> bool:
+    """Non-raising form of the compiled-path tiling contract.
+
+    The static-analysis tile pass (``repro.analysis``, DESIGN.md §9)
+    asks this instead of catching ``check_tile_alignment``'s
+    ``ValueError`` — same rule, boolean answer.
+
+    Args:
+        block_shape: Candidate BlockSpec block shape.
+
+    Returns:
+        True when a compiled (non-interpret) launch would accept it.
+    """
+    try:
+        check_tile_alignment(block_shape, interpret=False)
+    except ValueError:
+        return False
+    return True
 
 
 def aligned_rho(rho: int, interpret: Optional[bool] = None) -> int:

@@ -21,6 +21,20 @@ __all__ = ["mla_init", "mla_apply", "init_mla_cache"]
 
 
 def mla_init(key, cfg, dtype):
+    """Initialize the MLA parameter tree.
+
+    Args:
+        key: PRNG key.
+        cfg: Model config carrying ``cfg.mla`` (rank/head-dim fields),
+            ``cfg.d_model`` and ``cfg.n_heads``.
+        dtype: Parameter dtype.
+
+    Returns:
+        Dict of dense/rmsnorm parameters: the low-rank Q path
+        (``w_dq``/``q_norm``/``w_uq``), the shared compressed KV latent
+        (``w_dkv``/``kv_norm``), the decoupled RoPE key ``w_kr``, the
+        per-head expansions ``w_uk``/``w_uv``, and the output ``wo``.
+    """
     m = cfg.mla
     d, h = cfg.d_model, cfg.n_heads
     ks = jax.random.split(key, 8)
@@ -39,6 +53,7 @@ def mla_init(key, cfg, dtype):
 
 
 def _project_q(p, cfg, x, positions):
+    """Low-rank query projection -> ``(q_nope, q_pe)``, both (B,H,S,*)."""
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -62,7 +77,23 @@ def mla_apply(
     mode: str = "train",
     mesh=None,
 ):
-    """Returns (out, new_cache).  cache = (c_kv (B,S,L), k_pe (B,S,R))."""
+    """Apply one MLA block.
+
+    Args:
+        p: Parameter tree from ``mla_init``.
+        cfg: Model config (``cfg.mla`` ranks/head dims).
+        x: Input activations ``(B, S, d_model)``.
+        positions: Token positions for RoPE.
+        cache: ``(c_kv (B,S,L), k_pe (B,S,R))`` latent cache; decode
+            only.
+        mode: ``'train'`` / ``'prefill'`` (full attention) or
+            ``'decode'`` (absorbed attention over the latent cache).
+        mesh: Optional device mesh for sharded attention.
+
+    Returns:
+        ``(out, new_cache)`` — ``new_cache`` is the latent pair after
+        prefill, the extended cache tuple in decode, else None.
+    """
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads
@@ -135,6 +166,28 @@ def mla_apply(
 
 
 def init_mla_cache(cfg, batch, seq, dtype):
+    """Zero-filled latent decode cache ``(c_kv, k_pe)``.
+
+    The whole point of MLA decode: per token the cache holds only
+    ``kv_lora_rank + qk_rope_dim`` floats, independent of head count.
+
+    Args:
+        cfg: Model config carrying ``cfg.mla``.
+        batch: Batch size.
+        seq: Cache capacity in tokens.
+        dtype: Cache dtype.
+
+    Returns:
+        ``(c_kv (B,S,kv_lora_rank), k_pe (B,S,qk_rope_dim))``.
+
+    Example:
+        >>> from types import SimpleNamespace
+        >>> cfg = SimpleNamespace(
+        ...     mla=SimpleNamespace(kv_lora_rank=4, qk_rope_dim=2))
+        >>> c_kv, k_pe = init_mla_cache(cfg, 1, 3, "float32")
+        >>> c_kv.shape, k_pe.shape
+        ((1, 3, 4), (1, 3, 2))
+    """
     m = cfg.mla
     return (
         jnp.zeros((batch, seq, m.kv_lora_rank), dtype),

@@ -1,0 +1,7 @@
+"""Fixture: tile constants violating the Mosaic 8x128 contract."""
+
+# Violation: 12 is not a multiple of the 8-row sublane.
+ATTN_BLOCKS = (128, 64, 12)
+
+# Violation: compiled block shapes need lane % 128 == 0.
+OUT_TILE_SHAPE = (8, 100)

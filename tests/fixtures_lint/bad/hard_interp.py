@@ -1,0 +1,8 @@
+"""Fixture: pins interpret=True instead of deferring to policy.py."""
+
+from repro.kernels import engine
+
+
+def hardcoded(x):
+    # Violation: hardcodes the interpret mode (fixable to None).
+    return engine.accum(x, rho=2, kind="bb", interpret=True)

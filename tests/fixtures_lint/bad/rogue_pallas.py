@@ -1,0 +1,11 @@
+"""Fixture: constructs pl.pallas_call outside the engine front door."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def rogue_launch(kernel, out_shape):
+    # Violation: must route through kernels.engine.pallas_launch.
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(out_shape, "int32")
+    )

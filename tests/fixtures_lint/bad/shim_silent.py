@@ -1,0 +1,27 @@
+"""Fixture: deprecated shims that break the warn-and-delegate contract."""
+
+from repro.kernels import engine
+
+
+def silent_shim(x):
+    """Deprecated: use engine.accum instead."""
+    # Violation: delegates but never emits a DeprecationWarning.
+    return engine.accum(x)
+
+
+def warning_reimplementor(x):
+    """Deprecated: use engine.accum instead."""
+    import warnings
+
+    warnings.warn("use engine.accum", DeprecationWarning, stacklevel=2)
+    # Violation: warns but reimplements (no delegating return).
+    out = x + 1
+    return out
+
+
+class SilentShimClass:
+    """Deprecated thin shim that forgets to warn."""
+
+    def __init__(self, n):
+        # Violation: deprecated class whose __init__ never warns.
+        self.n = n

@@ -1,0 +1,4 @@
+"""Fixture: cross-references a DESIGN.md section that does not exist.
+
+The schedule layer is documented in DESIGN.md §99 (stale — violation).
+"""

@@ -1,0 +1,22 @@
+"""Fixture: a module every AST pass accepts (see DESIGN.md §2.3).
+
+A correct deprecation shim, aligned tile constants, policy-resolved
+interpret mode, and no pallas_call construction.
+"""
+
+import warnings
+
+from repro.kernels import engine
+
+GOOD_BLOCKS = (128, 64, 32, 16, 8)
+GOOD_TILE_SHAPE = (8, 128)
+
+
+def good_shim(x):
+    """Deprecated: use engine.accum instead."""
+    warnings.warn(
+        "good_shim is deprecated; use engine.accum",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return engine.accum(x, interpret=None)

@@ -11,9 +11,13 @@ Three layers:
     override, and the compiled-tile alignment contract.
 """
 
+import pathlib
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 from repro.core.schedule import SimplexSchedule, registered_kinds
 from repro.kernels import simplex_kernels as K
@@ -198,47 +202,14 @@ def test_aligned_rho():
 
 
 def test_no_hardcoded_interpret_true_in_kernels():
-    """Every pallas_call threads the resolved policy, never a literal."""
-    import ast
-    import pathlib
+    """Migrated into the simplexlint registry (DESIGN.md §9)."""
+    from repro.analysis import run_passes
 
-    pkg = pathlib.Path(K.__file__).parent
-    for py in pkg.glob("*.py"):
-        tree = ast.parse(py.read_text())
-        for node in ast.walk(tree):
-            if not isinstance(node, ast.Call):
-                continue
-            for kw in node.keywords:
-                if kw.arg != "interpret":
-                    continue
-                assert not (
-                    isinstance(kw.value, ast.Constant)
-                    and kw.value.value is True
-                ), f"{py.name}:{node.lineno} hardcodes interpret=True"
+    assert not run_passes(_REPO_ROOT, passes=["hardcoded-interpret"])
 
 
 def test_no_pallas_call_outside_engine_and_compiled():
-    """`pl.pallas_call` is constructed only by the engine's
-    ``pallas_launch`` front door (and the fused-XLA module, which owns
-    its own jit programs) — every other kernel module must launch
-    through ``engine.pallas_launch`` so the execution policy cannot be
-    bypassed."""
-    import ast
-    import pathlib
+    """Migrated into the simplexlint registry (DESIGN.md §9)."""
+    from repro.analysis import run_passes
 
-    allowed = {"engine.py", "compiled.py"}
-    pkg = pathlib.Path(K.__file__).parent
-    offenders = []
-    for py in pkg.glob("*.py"):
-        if py.name in allowed:
-            continue
-        tree = ast.parse(py.read_text())
-        for node in ast.walk(tree):
-            if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
-                offenders.append(f"{py.name}:{node.lineno}")
-            if isinstance(node, ast.Name) and node.id == "pallas_call":
-                offenders.append(f"{py.name}:{node.lineno}")
-    assert not offenders, (
-        "pallas_call constructed outside engine.py/compiled.py — route "
-        f"through engine.pallas_launch: {offenders}"
-    )
+    assert not run_passes(_REPO_ROOT, passes=["pallas-front-door"])

@@ -50,6 +50,26 @@ def test_design_s8_attention_hot_path():
         assert needle in s8, f"DESIGN.md §8 lost its {needle!r} contract"
 
 
+def test_design_s9_static_verification():
+    # ISSUE 10: §9 documents the simplexlint pass registry — the pass
+    # model, both families, and how to register a new pass.
+    assert "§9" in design_sections()
+    text = (REPO / "DESIGN.md").read_text()
+    s9 = text.split("## §9", 1)[1]
+    for needle in ("register_pass", "write-race", "halo",
+                   "bijectivity", "simplexlint", "fixtures_lint"):
+        assert needle in s9, f"DESIGN.md §9 lost its {needle!r} contract"
+
+
+def test_readme_static_checks():
+    text = (REPO / "README.md").read_text()
+    assert "## Static checks" in text
+    sec = text.split("## Static checks", 1)[1].split("\n## ", 1)[0]
+    for needle in ("simplexlint", "--json", "--fix", "DESIGN.md §9",
+                   "test_simplexlint.py"):
+        assert needle in sec, f"README static-checks section lost {needle!r}"
+
+
 def test_readme_serving_quickstart():
     text = (REPO / "README.md").read_text()
     assert "## Serving-benchmark quickstart" in text

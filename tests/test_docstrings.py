@@ -60,3 +60,31 @@ def test_flash_attention_doctests():
 
     result = doctest.testmod(repro.kernels.flash_attention, verbose=False)
     assert result.failed == 0 and result.attempted > 0
+
+
+def test_analysis_doctests():
+    # ISSUE 10: the simplexlint subsystem documents itself (DESIGN.md §9)
+    import repro.analysis
+    import repro.analysis.registry
+    import repro.analysis.schedule_passes
+
+    for mod in (repro.analysis, repro.analysis.registry,
+                repro.analysis.schedule_passes):
+        result = doctest.testmod(mod, verbose=False)
+        assert result.failed == 0 and result.attempted > 0, mod.__name__
+
+
+def test_ops_doctests():
+    # ISSUE 10 brings the public jit'd wrappers into the gate
+    import repro.kernels.ops
+
+    result = doctest.testmod(repro.kernels.ops, verbose=False)
+    assert result.failed == 0 and result.attempted > 0
+
+
+def test_mla_doctests():
+    # ISSUE 10 brings the MLA latent-cache contract into the gate
+    import repro.models.mla
+
+    result = doctest.testmod(repro.models.mla, verbose=False)
+    assert result.failed == 0 and result.attempted > 0
